@@ -1,0 +1,29 @@
+"""Shared benchmark helpers."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+
+def time_fn(fn, *args, warmup=2, iters=10):
+    """Median wall-time per call in microseconds (jit-compiled callables)."""
+    import jax
+
+    for _ in range(warmup):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+def emit(rows):
+    """Print ``name,us_per_call,derived`` CSV lines."""
+    for name, us, derived in rows:
+        dstr = ";".join(f"{k}={v}" for k, v in derived.items())
+        print(f"{name},{us:.1f},{dstr}", flush=True)

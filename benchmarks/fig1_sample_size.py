@@ -1,0 +1,76 @@
+"""Paper Figure 1: sample-size behaviour of T-TBS vs R-TBS under four
+batch-size regimes -- (a) growing (T-TBS overflows, R-TBS pinned at n),
+(b) constant (T-TBS fluctuates, R-TBS constant), (c) uniform-random,
+(d) decaying (both shrink -- a feature, Sec. 1)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import rtbs, simple
+from repro.data.streams import batch_size_schedule
+
+from .common import time_fn
+
+PROTO = jax.ShapeDtypeStruct((), jnp.int32)
+
+
+def _run_regime(kind, lam, n, T, b=100, phi=None, cap=None):
+    cap = cap or 16 * n
+    phi_kw = {} if phi is None else {"phi": phi}
+    sizes_t, sizes_r, overflowed = [], [], 0
+    p = math.exp(-lam)
+    q = min(1.0, n * (1 - p) / b)
+    st_t = simple.init(PROTO, cap)
+    st_r = rtbs.init(PROTO, n)
+    bcap = max(batch_size_schedule(kind, t, b=b, **phi_kw) for t in range(T)) + 1
+    bcap = min(bcap, 4 * cap)
+    for t in range(T):
+        bs = min(batch_size_schedule(kind, t, b=b, seed=t, **phi_kw), bcap)
+        items = jnp.ones((bcap,), jnp.int32)
+        key = jax.random.fold_in(jax.random.key(0), t)
+        st_t = simple.ttbs_step(key, st_t, items, jnp.int32(bs),
+                                p=jnp.float32(p), q=jnp.float32(q))
+        st_r = rtbs.step(key, st_r, items, jnp.int32(bs), n=n, lam=lam)
+        sizes_t.append(int(st_t.count))
+        sizes_r.append(float(st_r.lat.weight))
+    return np.asarray(sizes_t), np.asarray(sizes_r), int(st_t.overflow)
+
+
+def run():
+    rows = []
+    n = 1000
+    regimes = [
+        ("fig1a_growing", "growing", 0.05, 1.002, 400),
+        ("fig1b_constant", "constant", 0.1, None, 300),
+        ("fig1c_uniform", "uniform", 0.1, None, 300),
+        ("fig1d_decaying", "decaying", 0.01, 0.8, 300),
+    ]
+    for name, kind, lam, phi, T in regimes:
+        st, sr, ovf = _run_regime(kind, lam, n, T, phi=phi)
+        derived = {
+            "ttbs_max": int(st.max()),
+            "ttbs_final": int(st[-1]),
+            "rtbs_max": round(float(sr.max()), 1),
+            "rtbs_final": round(float(sr[-1]), 1),
+            "ttbs_overflow_drops": ovf,
+            "rtbs_bounded": bool(sr.max() <= n + 1e-3),
+        }
+        # one timed step for the us_per_call column
+        st_r = rtbs.init(PROTO, n)
+        items = jnp.ones((128,), jnp.int32)
+        us = time_fn(
+            lambda k: rtbs.step(k, st_r, items, jnp.int32(100), n=n, lam=lam),
+            jax.random.key(1),
+        )
+        rows.append((name, us, derived))
+    return rows
+
+
+if __name__ == "__main__":
+    from .common import emit
+
+    emit(run())

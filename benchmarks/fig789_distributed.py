@@ -1,0 +1,60 @@
+"""Paper Figures 7/8/9: distributed implementation comparison + scaling.
+
+Fig. 7: per-batch time of the five implementation points on an 8-shard host
+mesh. Expected ordering (as in the paper): D-T-TBS < CP+Dist < CP+Cent <
+KV+CJ < KV+RJ. Host-mesh wall time measures total work + copies (all shards
+share one CPU), so it reflects the paper's *work/traffic* ordering rather
+than real network latency -- EXPERIMENTS.md notes the caveat.
+
+Fig. 8 (scale-out): CP+Dist per-batch time vs shard count at fixed global
+batch. Fig. 9 (scale-up): per-batch time vs per-shard batch size."""
+from __future__ import annotations
+
+import os
+import pathlib
+import subprocess
+import sys
+
+HERE = pathlib.Path(__file__).parent
+SRC = str(HERE.parent / "src")
+
+
+def _worker(shards, bps, impl, timeout=600):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + str(HERE.parent) + os.pathsep + \
+        env.get("PYTHONPATH", "")
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks._dist_worker",
+         str(shards), str(bps), impl],
+        capture_output=True, text=True, timeout=timeout, env=env,
+        cwd=str(HERE.parent),
+    )
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    line = proc.stdout.strip().splitlines()[-1]
+    return float(line.split(",")[1])
+
+
+def run():
+    rows = []
+    # Fig. 7: implementation comparison at 8 shards
+    for impl in ("dttbs", "cp_dist", "cp_cent", "kv_cj", "kv_rj"):
+        us = _worker(8, 2048, impl)
+        rows.append((f"fig7_impl_{impl}", us, {"shards": 8, "batch/shard": 2048}))
+    # Fig. 8: scale-out (fixed global batch = 16384)
+    for shards in (1, 2, 4, 8):
+        us = _worker(shards, 16384 // shards, "cp_dist")
+        rows.append((f"fig8_scaleout_{shards}w", us,
+                     {"global_batch": 16384, "shards": shards}))
+    # Fig. 9: scale-up (8 shards, growing batch)
+    for bps in (512, 2048, 8192):
+        us = _worker(8, bps, "cp_dist")
+        rows.append((f"fig9_scaleup_b{bps}", us,
+                     {"shards": 8, "batch/shard": bps}))
+    return rows
+
+
+if __name__ == "__main__":
+    from .common import emit
+
+    emit(run())

@@ -1,0 +1,51 @@
+"""Benchmark harness: one module per paper table/figure (+ the roofline
+report). Prints ``name,us_per_call,derived`` CSV.
+
+  fig1   -- sample-size behaviour, T-TBS vs R-TBS (paper Fig. 1)
+  table1 -- kNN accuracy + 10% ES across drift patterns (paper Table 1/Fig.10)
+  fig12  -- linear regression MSE + ES, saturated/unsaturated (paper Fig. 12)
+  fig13  -- Naive Bayes on the Usenet2-like stream (paper Fig. 13)
+  fig789 -- distributed impl comparison + scale-out/up (paper Figs. 7-9)
+  roofline -- dry-run roofline table (EXPERIMENTS.md §Roofline)
+
+Select with ``python -m benchmarks.run [names...]`` (default: all).
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+from .common import emit
+
+SUITES = ["fig1", "table1", "fig12", "fig13", "fig789", "roofline"]
+
+
+def main() -> None:
+    args = sys.argv[1:] or SUITES
+    for name in args:
+        t0 = time.time()
+        if name == "fig1":
+            from . import fig1_sample_size as m
+        elif name == "table1":
+            from . import table1_knn as m
+        elif name == "fig12":
+            from . import fig12_linreg as m
+        elif name == "fig13":
+            from . import fig13_nb as m
+        elif name == "fig789":
+            from . import fig789_distributed as m
+        elif name == "roofline":
+            from . import roofline as m
+        else:
+            raise SystemExit(f"unknown suite {name}; pick from {SUITES}")
+        try:
+            rows = m.run()
+        except Exception as e:  # noqa: BLE001
+            print(f"{name},0.0,ERROR={e!r}", flush=True)
+            continue
+        emit(rows)
+        print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""D-R-TBS on a multi-device mesh: the co-partitioned reservoir with
+distributed decisions (paper Sec. 5.3, Fig. 6(b)) running over 8 host devices.
+
+This script re-execs itself with XLA_FLAGS so the devices exist before jax
+initializes (the same pattern the production launcher uses per-pod).
+
+Run: PYTHONPATH=src python examples/distributed_reservoir.py
+"""
+import os
+import sys
+
+if "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    os.execv(sys.executable, [sys.executable] + sys.argv)
+
+import functools  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import PartitionSpec as P  # noqa: E402
+
+from repro.core import distributed as dist  # noqa: E402
+
+S, CAP_S, BPS, N, LAM = 8, 64, 16, 100, 0.1
+
+mesh = jax.make_mesh((S,), (dist.AXIS,),
+                     axis_types=(jax.sharding.AxisType.Auto,))
+step = functools.partial(dist.drtbs_shard_step, n=N, lam=LAM)
+
+
+def shard_fn(key, items, nfull, partial, weight, tweight, oflow, bi, bc):
+    st = dist.DRTBSShard(items=items, nfull=nfull[0], partial_item=partial,
+                         weight=weight, total_weight=tweight, overflow=oflow[0])
+    st = step(key, st, bi, bc[0])
+    return (st.items, st.nfull[None], st.partial_item, st.weight,
+            st.total_weight, st.overflow[None])
+
+
+smapped = jax.jit(jax.shard_map(
+    shard_fn, mesh=mesh,
+    in_specs=(P(), P(dist.AXIS), P(dist.AXIS), P(), P(), P(), P(dist.AXIS),
+              P(dist.AXIS), P(dist.AXIS)),
+    out_specs=(P(dist.AXIS), P(dist.AXIS), P(), P(), P(), P(dist.AXIS)),
+    check_vma=False,
+))
+
+state = (
+    jnp.zeros((S * CAP_S,), jnp.int32),   # items (ids)
+    jnp.zeros((S,), jnp.int32),           # per-shard full counts
+    jnp.int32(0),                         # replicated partial item
+    jnp.float32(0.0),                     # C
+    jnp.float32(0.0),                     # W
+    jnp.zeros((S,), jnp.int32),           # overflow
+)
+
+print(f"mesh: {S} shards; global reservoir n={N}; uneven per-shard batches")
+for t in range(12):
+    bc = jnp.asarray([(t + s) % 3 * BPS // 2 for s in range(S)], jnp.int32)
+    bi = jnp.arange(S * BPS, dtype=jnp.int32) + 10000 * t
+    key = jax.random.fold_in(jax.random.key(0), t)
+    state = smapped(key, *state, bi, bc)
+    items, nfull, partial, weight, tweight, oflow = state
+    print(f"  t={t:2d} |B|={int(bc.sum()):4d}  C={float(weight):6.2f}  "
+          f"W={float(tweight):8.2f}  shard fulls={[int(x) for x in nfull]}")
+assert int(oflow.sum()) == 0
+print("bounded, co-partitioned, zero payload shuffling -- done.")

@@ -1,0 +1,137 @@
+"""Checkpoint/restart substrate (fault tolerance; paper Sec. 5.1 checkpoints
+the sample and system state -- we checkpoint params, optimizer, RNG, step AND
+the reservoir).
+
+Layout: <dir>/step_<n>/ with manifest.json (tree structure, shapes, dtypes)
++ leaves.npz. Writes go to a tmp dir then os.replace (atomic publish): a crash
+mid-write never corrupts the latest checkpoint. AsyncCheckpointer runs saves
+on a background thread (training never blocks on I/O). ``reshard_reservoir``
+re-splits D-R-TBS shard states when the data-parallel width changes (elastic
+scaling: a lost pod degrades DP width without violating eq. (1) -- per-shard
+full-item sets are exchangeable, so re-partitioning item rows preserves all
+inclusion probabilities)."""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+def save_checkpoint(directory, step: int, tree: Any, *, keep: int = 3) -> str:
+    """Atomically write a checkpoint; prune to the newest ``keep``."""
+    directory = pathlib.Path(directory)
+    directory.mkdir(parents=True, exist_ok=True)
+    leaves, treedef = _flatten(tree)
+    tmp = directory / f".tmp_step_{step}"
+    final = directory / f"step_{step}"
+    if tmp.exists():
+        import shutil
+
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+    arrays = {f"leaf_{i}": np.asarray(l) for i, l in enumerate(leaves)}
+    np.savez(tmp / "leaves.npz", **arrays)
+    manifest = {
+        "step": step,
+        "num_leaves": len(leaves),
+        "treedef": str(treedef),
+        "shapes": [list(np.shape(l)) for l in leaves],
+        "dtypes": [str(np.asarray(l).dtype) for l in leaves],
+    }
+    (tmp / "manifest.json").write_text(json.dumps(manifest))
+    if final.exists():
+        import shutil
+
+        shutil.rmtree(final)
+    os.replace(tmp, final)  # atomic publish
+    # prune old steps
+    steps = sorted(
+        int(p.name.split("_")[1])
+        for p in directory.glob("step_*")
+        if p.name.split("_")[1].isdigit()
+    )
+    for s in steps[:-keep]:
+        import shutil
+
+        shutil.rmtree(directory / f"step_{s}", ignore_errors=True)
+    return str(final)
+
+
+def latest_step(directory) -> Optional[int]:
+    directory = pathlib.Path(directory)
+    if not directory.exists():
+        return None
+    steps = [
+        int(p.name.split("_")[1])
+        for p in directory.glob("step_*")
+        if p.name.split("_")[1].isdigit()
+    ]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(directory, step: int, tree_like: Any) -> Any:
+    """Restore into the structure of ``tree_like`` (shapes may be resharded by
+    the caller afterwards)."""
+    d = pathlib.Path(directory) / f"step_{step}"
+    data = np.load(d / "leaves.npz")
+    manifest = json.loads((d / "manifest.json").read_text())
+    leaves = [data[f"leaf_{i}"] for i in range(manifest["num_leaves"])]
+    _, treedef = _flatten(tree_like)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+class AsyncCheckpointer:
+    """Background-thread checkpoint writer with at-most-one in flight."""
+
+    def __init__(self, directory, *, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self.last_path: Optional[str] = None
+
+    def save(self, step: int, tree: Any):
+        self.wait()
+        host_tree = jax.tree_util.tree_map(np.asarray, tree)  # device->host now
+
+        def work():
+            self.last_path = save_checkpoint(
+                self.directory, step, host_tree, keep=self.keep
+            )
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+
+def reshard_reservoir(items: np.ndarray, nfull: np.ndarray, new_shards: int,
+                      cap_s: int):
+    """Elastic re-partition of a D-R-TBS reservoir: gather all valid full items
+    and round-robin them over ``new_shards`` fixed-capacity shard buffers.
+    Full items are exchangeable, so any deterministic re-partition preserves
+    every inclusion probability (Theorem 4.2 is per-item marginal)."""
+    S_old, cap_old = items.shape[0], items.shape[1]
+    rows = [items[s, : int(nfull[s])] for s in range(S_old)]
+    allrows = np.concatenate(rows, axis=0) if rows else items[:0, 0]
+    out = np.zeros((new_shards, cap_s) + items.shape[2:], items.dtype)
+    counts = np.zeros((new_shards,), np.int32)
+    for i, row in enumerate(allrows):
+        s = i % new_shards
+        if counts[s] < cap_s:
+            out[s, counts[s]] = row
+            counts[s] += 1
+    assert counts.sum() == len(allrows), "elastic reshard overflow: raise cap_s"
+    return out, counts

@@ -1,0 +1,2 @@
+"""One module per assigned architecture; each exports CONFIG (exact assignment
+numbers) and SMOKE (reduced same-family config for CPU smoke tests)."""

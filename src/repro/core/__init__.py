@@ -1,0 +1,14 @@
+"""repro.core -- the paper's contribution: temporally-biased sampling schemes.
+
+JAX (fixed-shape, jit/scan/shard_map-safe) implementations:
+  * :mod:`repro.core.rtbs`    -- R-TBS (Algorithm 2+3), the paper's main algorithm
+  * :mod:`repro.core.simple`  -- T-TBS (Alg. 1), B-TBS (Alg. 4), B-RS (Alg. 5), SW
+  * :mod:`repro.core.latent`  -- latent fractional samples + downsampling (Alg. 3)
+  * :mod:`repro.core.rng`     -- exact binomial/hypergeometric/stochastic-rounding
+  * :mod:`repro.core.distributed` -- D-R-TBS / D-T-TBS over shard_map (Sec. 5)
+
+Paper-literal Python oracles (incl. B-Chao, Appendix D): :mod:`repro.core.ref`.
+"""
+from . import latent, ref, rng, rtbs, simple  # noqa: F401
+from .latent import Latent, downsample, realize  # noqa: F401
+from .rtbs import RTBSState, init as rtbs_init, step as rtbs_step  # noqa: F401

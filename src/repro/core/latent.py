@@ -1,0 +1,191 @@
+"""Latent ("fractional") samples -- the core data structure of R-TBS (paper Sec. 4.1).
+
+A latent sample L = (A, pi, C) holds floor(C) "full" items and at most one
+"partial" item; realizing a sample S from L includes every full item and the
+partial item with probability frac(C), so E[|S|] = C exactly (paper eq. (3)).
+
+Fixed-shape JAX encoding (jit/scan/shard_map-safe):
+  * ``items``   -- a pytree whose leaves have leading dim ``cap``
+  * ``nfull``   -- int32, floor(C): slots [0, nfull) hold the full items
+  * ``weight``  -- float32, the sample weight C; if frac(C) > 0 the partial item
+                   lives at slot ``nfull``; slots above are garbage.
+
+The key operator is :func:`downsample` (paper Algorithm 3), which rescales every
+item's inclusion probability by exactly C'/C (Theorem 4.1). We implement it as a
+branch-selected gather: each branch produces a slot-index map ``src`` (new slot ->
+old slot) so the buffer rebuild is a single fixed-shape gather, which is also the
+form the Pallas ``reservoir_compact`` kernel accelerates.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import rng
+
+
+def _f32(x):
+    return jnp.asarray(x, jnp.float32)
+
+
+def floor_frac(c):
+    """(floor(C) as int32, frac(C) in [0,1)) with float-noise clipping."""
+    c = _f32(c)
+    k = jnp.floor(c)
+    return k.astype(jnp.int32), jnp.clip(c - k, 0.0, 1.0)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class Latent:
+    """Latent fractional sample; see module docstring for slot conventions."""
+
+    items: Any            # pytree, leaves [cap, ...]
+    nfull: jax.Array      # int32 scalar
+    weight: jax.Array     # float32 scalar (C)
+
+    @property
+    def cap(self) -> int:
+        return jax.tree_util.tree_leaves(self.items)[0].shape[0]
+
+    def has_partial(self) -> jax.Array:
+        _, f = floor_frac(self.weight)
+        return f > 0
+
+
+def gather(items: Any, idx: jax.Array) -> Any:
+    """tree-wide items[idx] (fill_value semantics unused: callers keep idx in range)."""
+    return jax.tree_util.tree_map(lambda a: jnp.take(a, idx, axis=0), items)
+
+
+def make_empty(item_proto: Any, cap: int) -> Latent:
+    """Empty latent sample with capacity ``cap``; item_proto gives leaf shapes/dtypes
+    (a pytree of arrays or ShapeDtypeStructs describing ONE item)."""
+    items = jax.tree_util.tree_map(
+        lambda p: jnp.zeros((cap,) + tuple(p.shape), p.dtype), item_proto
+    )
+    return Latent(items=items, nfull=jnp.int32(0), weight=jnp.float32(0.0))
+
+
+def realize(key: jax.Array, lat: Latent) -> tuple[jax.Array, jax.Array]:
+    """Draw S from L per paper eq. (2): returns (mask[cap] bool, size int32).
+
+    Full slots are always included; the partial slot is included w.p. frac(C).
+    """
+    k, f = floor_frac(lat.weight)
+    slot = jnp.arange(lat.cap, dtype=jnp.int32)
+    take_partial = jax.random.bernoulli(key, f)
+    mask = (slot < k) | ((slot == k) & take_partial & (f > 0))
+    return mask, k + take_partial.astype(jnp.int32) * (f > 0).astype(jnp.int32)
+
+
+def downsample(key: jax.Array, lat: Latent, new_weight) -> Latent:
+    """Paper Algorithm 3: rescale inclusion probabilities by C'/C (Theorem 4.1).
+
+    Requires 0 < C' <= C (C' == C is an identity shortcut). All branches are
+    computed as slot-index maps and selected with jnp.where, so the whole
+    operation is one gather regardless of branch.
+    """
+    cap = lat.cap
+    cw = _f32(lat.weight)
+    nw = jnp.minimum(_f32(new_weight), cw)
+    k, f = floor_frac(cw)
+    kp, fp = floor_frac(nw)
+
+    kperm, ku = jax.random.split(key)
+    perm = rng.prefix_permutation(kperm, cap, k)  # random order over full slots
+    u = jax.random.uniform(ku, dtype=jnp.float32)
+    slot = jnp.arange(cap, dtype=jnp.int32)
+    identity = slot
+
+    safe_c = jnp.maximum(cw, 1e-30)
+
+    # ---- case kp == 0 (no full items retained; paper Alg.3 lines 5-8) ----
+    # keep old partial as partial w.p. f/C, else a uniform full item becomes partial.
+    keep_old = u <= f / safe_c
+    src_case0 = identity.at[0].set(jnp.where(keep_old, k, perm[0]))
+
+    # ---- case 0 < kp == k (no items deleted; lines 9-11) ----
+    # swap partial<->random-full w.p. 1-rho, rho = (1-(C'/C)f)/(1-f').
+    rho = (1.0 - (nw / safe_c) * f) / jnp.maximum(1.0 - fp, 1e-30)
+    do_swap = u > rho
+    swap_a = perm[0]          # the full slot that becomes partial
+    src_swap = identity.at[swap_a].set(k).at[k].set(swap_a)
+    src_case_eq = jnp.where(do_swap, src_swap, identity)
+
+    # ---- case 0 < kp < k (items deleted; lines 12-18) ----
+    # branch1 (w.p. (C'/C)f): old partial becomes full; fulls = {pi} + perm[:kp-1];
+    #                          partial = perm[kp-1].
+    # branch2 (else):          fulls = perm[:kp]; partial = perm[kp].
+    p1 = (nw / safe_c) * f
+    b1 = u <= p1
+    kp_m1 = jnp.maximum(kp - 1, 0)
+    # branch1 map: new slot j<kp-1 -> perm[j]; slot kp-1 -> k (old partial);
+    #              slot kp -> perm[kp-1]
+    src_b1 = jnp.where(slot < kp_m1, perm[slot], identity)
+    src_b1 = src_b1.at[kp_m1].set(k)
+    src_b1 = src_b1.at[kp].set(perm[kp_m1])
+    # branch2 map: new slot j<kp -> perm[j]; slot kp -> perm[kp]
+    src_b2 = jnp.where(slot <= kp, perm[jnp.minimum(slot, cap - 1)], identity)
+    src_case_lt = jnp.where(b1, src_b1, src_b2)
+
+    src = jnp.where(
+        kp == 0,
+        src_case0,
+        jnp.where(kp == k, src_case_eq, src_case_lt),
+    )
+    # C' == C shortcut (also covers the k==0,f==0 empty edge): identity.
+    src = jnp.where(nw >= cw, identity, src)
+
+    new_items = gather(lat.items, src)
+    return Latent(items=new_items, nfull=kp, weight=nw)
+
+
+def insert_full(lat: Latent, batch_items: Any, bcount) -> Latent:
+    """Insert ``bcount`` batch items (valid prefix of ``batch_items``) as FULL items,
+    preserving the partial item (relocated above the inserted block).
+
+    Paper Alg. 2 lines 9/20: arriving items are accepted with probability 1.
+    Caller guarantees nfull + bcount + 1 <= cap.
+    """
+    bcap = jax.tree_util.tree_leaves(batch_items)[0].shape[0]
+    k = lat.nfull
+    bcount = jnp.asarray(bcount, jnp.int32)
+
+    # read the (possible) partial payload BEFORE scattering over its slot
+    partial_payload = jax.tree_util.tree_map(lambda a: a[k], lat.items)
+
+    bpos = jnp.arange(bcap, dtype=jnp.int32)
+    dest = jnp.where(bpos < bcount, k + bpos, lat.cap)  # cap => dropped
+    items = jax.tree_util.tree_map(
+        lambda a, b: a.at[dest].set(b, mode="drop"), lat.items, batch_items
+    )
+    # relocate the partial item to the new top slot
+    items = jax.tree_util.tree_map(
+        lambda a, p: a.at[k + bcount].set(
+            jnp.where(_bcast(lat.has_partial(), p), p, a[k + bcount])
+        ),
+        items,
+        jax.tree_util.tree_map(lambda p: p, partial_payload),
+    )
+    return Latent(
+        items=items,
+        nfull=k + bcount,
+        weight=lat.weight + bcount.astype(jnp.float32),
+    )
+
+
+def _bcast(pred, like):
+    """Broadcast a scalar bool against an item payload leaf."""
+    return jnp.reshape(pred, (1,) * like.ndim) if like.ndim else pred
+
+
+def concat_items(a: Any, b: Any) -> Any:
+    return jax.tree_util.tree_map(lambda x, y: jnp.concatenate([x, y], axis=0), a, b)
+
+
+def truncate_items(items: Any, cap: int) -> Any:
+    return jax.tree_util.tree_map(lambda x: x[:cap], items)

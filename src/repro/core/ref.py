@@ -1,0 +1,270 @@
+"""Paper-literal reference implementations (pure Python objects + floats).
+
+These follow the paper's pseudocode line-by-line with explicit sets and are the
+oracles for the fixed-shape JAX implementations: both are Monte-Carlo tested
+against the analytic inclusion-probability invariants (eq. (1), eq. (4),
+Theorem 3.1(ii), Theorem 4.1), and the trajectories of the *deterministic*
+bookkeeping scalars (W_t, C_t) must match the JAX versions exactly.
+
+Also hosts B-Chao (paper Appendix D, Algorithms 6+7) -- the prior-art baseline
+that *fails* eq. (1) during fill-up and under slow arrival rates; we reproduce
+that failure in the benchmarks, as the paper does analytically.
+"""
+from __future__ import annotations
+
+import math
+import random
+from dataclasses import dataclass, field
+
+
+def _frac(x: float) -> float:
+    return x - math.floor(x)
+
+
+@dataclass
+class RefLatent:
+    """Latent sample L = (A, pi, C): full items, <=1 partial item, weight C."""
+
+    full: list = field(default_factory=list)
+    partial: object = None
+    weight: float = 0.0
+
+    def realize(self, rnd: random.Random) -> list:
+        s = list(self.full)
+        f = _frac(self.weight)
+        if self.partial is not None and f > 0 and rnd.random() < f:
+            s.append(self.partial)
+        return s
+
+
+def ref_downsample(rnd: random.Random, lat: RefLatent, new_weight: float) -> RefLatent:
+    """Paper Algorithm 3 (verbatim case analysis)."""
+    C, Cp = lat.weight, new_weight
+    assert 0 < Cp <= C, (Cp, C)
+    if Cp >= C:
+        return lat
+    A = list(lat.full)
+    pi = lat.partial
+    k, kp = math.floor(C), math.floor(Cp)
+    f, fp = _frac(C), _frac(Cp)
+    U = rnd.random()
+    if kp == 0:
+        # lines 5-8: no full items retained
+        if pi is not None and U <= f / C:
+            new_pi = pi
+        else:
+            new_pi = rnd.choice(A)
+        return RefLatent(full=[], partial=new_pi if fp > 0 else None, weight=Cp)
+    if kp == k:
+        # lines 9-11: no items deleted; maybe swap partial <-> a full item
+        rho = (1.0 - (Cp / C) * f) / (1.0 - fp) if fp < 1.0 else 0.0
+        if U > rho:
+            a = rnd.randrange(len(A))
+            new_pi = A[a]
+            A = A[:a] + A[a + 1 :] + ([pi] if pi is not None else [])
+            return RefLatent(full=A, partial=new_pi if fp > 0 else None, weight=Cp)
+        return RefLatent(full=A, partial=pi if fp > 0 else None, weight=Cp)
+    # lines 12-18: 0 < kp < k
+    if pi is not None and U <= (Cp / C) * f:
+        sel = rnd.sample(A, kp)
+        new_pi = sel[-1]
+        full = sel[:-1] + [pi]
+    else:
+        sel = rnd.sample(A, kp + 1)
+        new_pi = sel[-1]
+        full = sel[:-1]
+    return RefLatent(full=full, partial=new_pi if fp > 0 else None, weight=Cp)
+
+
+class RefRTBS:
+    """Paper Algorithm 2, verbatim."""
+
+    def __init__(self, n: int, lam: float, seed: int = 0):
+        self.n, self.lam = n, lam
+        self.rnd = random.Random(seed)
+        self.lat = RefLatent()
+        self.W = 0.0
+
+    def step(self, batch: list) -> None:
+        n, rnd = self.n, self.rnd
+        decay = math.exp(-self.lam)
+        B = len(batch)
+        if self.W < n:  # previously unsaturated (lines 5-12)
+            self.W = decay * self.W
+            if 0 < self.W < self.lat.weight:
+                self.lat = ref_downsample(rnd, self.lat, self.W)
+            else:
+                self.lat.weight = min(self.lat.weight, max(self.W, 0.0))
+            self.lat = RefLatent(
+                full=self.lat.full + list(batch),
+                partial=self.lat.partial,
+                weight=self.lat.weight + B,
+            )
+            self.W += B
+            if self.lat.weight > n:
+                self.lat = ref_downsample(rnd, self.lat, float(n))
+        else:  # previously saturated (lines 14-20)
+            self.W = decay * self.W + B
+            if self.W >= n:
+                m_real = B * n / self.W
+                m = math.floor(m_real) + (1 if rnd.random() < _frac(m_real) else 0)
+                victims = rnd.sample(range(len(self.lat.full)), m)
+                inserts = rnd.sample(batch, m)
+                full = list(self.lat.full)
+                for v, b in zip(victims, inserts):
+                    full[v] = b
+                self.lat = RefLatent(full=full, partial=None, weight=float(n))
+            else:
+                self.lat = ref_downsample(rnd, self.lat, self.W - B)
+                self.lat = RefLatent(
+                    full=self.lat.full + list(batch),
+                    partial=self.lat.partial,
+                    weight=self.lat.weight + B,
+                )
+
+    def sample(self) -> list:
+        return self.lat.realize(self.rnd)
+
+
+class RefTTBS:
+    """Paper Algorithm 1, verbatim."""
+
+    def __init__(self, n: int, lam: float, b: float, seed: int = 0):
+        self.p = math.exp(-lam)
+        self.q = n * (1.0 - self.p) / b
+        assert self.q <= 1.0 + 1e-9, "requires b >= n(1-e^-lambda)"
+        self.rnd = random.Random(seed)
+        self.S: list = []
+
+    def step(self, batch: list) -> None:
+        rnd = self.rnd
+        m = sum(rnd.random() < self.p for _ in self.S)  # Binomial(|S|, p)
+        self.S = rnd.sample(self.S, m)
+        k = sum(rnd.random() < self.q for _ in batch)
+        self.S = self.S + rnd.sample(list(batch), k)
+
+    def sample(self) -> list:
+        return list(self.S)
+
+
+class RefBRS:
+    """Paper Algorithm 5 (batched classical reservoir sampling)."""
+
+    def __init__(self, n: int, seed: int = 0):
+        self.n = n
+        self.rnd = random.Random(seed)
+        self.S: list = []
+        self.W = 0
+
+    @staticmethod
+    def _hypergeo(rnd, k, a, b):
+        """# type-a successes drawing k from a+b without replacement (exact)."""
+        pop = [1] * a + [0] * b
+        return sum(rnd.sample(pop, k))
+
+    def step(self, batch: list) -> None:
+        rnd, n = self.rnd, self.n
+        B = len(batch)
+        C = min(n, self.W + B)
+        M = self._hypergeo(rnd, C, B, self.W)
+        keep = min(n - M, len(self.S))
+        self.S = rnd.sample(self.S, keep) + rnd.sample(list(batch), M)
+        self.W += B
+
+    def sample(self) -> list:
+        return list(self.S)
+
+
+class RefBChao:
+    """Paper Appendix D: batched, time-decayed Chao [9] (Algorithms 6+7).
+
+    Maintains per-item weights, tracks overweight items (set V) explicitly, and
+    -- as the paper proves -- violates eq. (1) during fill-up and whenever data
+    arrives slowly relative to the decay rate. Kept as the prior-art baseline.
+    """
+
+    def __init__(self, n: int, lam: float, seed: int = 0):
+        self.n, self.lam = n, lam
+        self.rnd = random.Random(seed)
+        self.S: list = []          # non-overweight items in the reservoir
+        self.W = 0.0               # aggregate weight of non-overweight items
+        self.V: list = []          # [(item, weight)] overweight items
+        self.A: list = []          # newly non-overweight (transient, per item)
+
+    def _normalize(self, x):
+        """Algorithm 7. Returns (pi_x, x_is_overweight); mutates V/A/W."""
+        n = self.n
+        W = self.W + 1.0 + sum(w for _, w in self.V)
+        self.A = []
+        if n / W <= 1.0:
+            self.A = list(self.V)
+            self.V = []
+            self.W = W
+            return n / W, False
+        # x itself is overweight
+        pi_x = 1.0
+        W -= 1.0
+        D = [(x, 1.0)]
+        V = sorted(self.V, key=lambda t: -t[1])
+        while V:
+            z, wz = V[0]
+            if (n - len(D)) * wz / W > 1.0:
+                D.append((z, wz))
+                W -= wz
+                V = V[1:]
+            else:
+                break
+        self.A = V
+        self.V = D
+        self.W = W
+        return pi_x, True
+
+    def step(self, batch: list) -> None:
+        rnd, n = self.rnd, self.n
+        decay = math.exp(-self.lam)
+        self.W *= decay
+        self.V = [(z, w * decay) for z, w in self.V]
+        for x in batch:
+            if len(self.S) + len(self.V) < n:
+                self.S.append(x)
+                self.W += 1.0
+                continue
+            pi_x, x_over = self._normalize(x)
+            if rnd.random() <= pi_x:
+                # choose a victim: from A w.p. (1 - (n-|V|) w_z / W)/pi_x each,
+                # else uniform from S
+                y = None
+                alpha = 0.0
+                U = rnd.random()
+                for z, wz in self.A:
+                    alpha += (1.0 - (n - len(self.V)) * wz / self.W) / pi_x
+                    if U <= alpha:
+                        y = (z, wz)
+                        break
+                if y is not None:
+                    self.A.remove(y)
+                else:
+                    y_idx = rnd.randrange(len(self.S))
+                    self.S = self.S[:y_idx] + self.S[y_idx + 1 :]
+                if not x_over:  # Alg.6 line 20: if (x,1) not in V
+                    self.S.append(x)
+            # Alg.6 line 21: newly non-overweight items re-enter S
+            self.S.extend(z for z, _ in self.A)
+            self.A = []
+
+    def sample(self) -> list:
+        return list(self.S) + [z for z, _ in self.V]
+
+
+class RefSW:
+    """Sliding window over the last n items (baseline "SW")."""
+
+    def __init__(self, n: int, seed: int = 0):
+        self.n = n
+        self.S: list = []
+
+    def step(self, batch: list) -> None:
+        self.S = (self.S + list(batch))[-self.n :]
+
+    def sample(self) -> list:
+        return list(self.S)

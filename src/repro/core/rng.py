@@ -1,0 +1,128 @@
+"""Random-variate primitives used by the TBS family of algorithms.
+
+Everything here is exact (inverse-transform / conditional decompositions), jit-safe
+(fixed trip counts), and scalar-cheap: these are the per-batch bookkeeping draws of
+Algorithms 1/2/3/5 of the paper, not per-item work.
+
+The paper [Hentschel, Haas, Tian 2018] relies on three primitives:
+  * BINOMIAL(j, r)           -- Alg. 1 lines 6/8  (T-TBS thinning)
+  * HYPERGEO(k, a, b)        -- Alg. 5 line 5     (B-RS), and the multivariate split
+                                used by D-R-TBS "distributed decisions" (Sec. 5.3)
+  * STOCHROUND(x)            -- Alg. 2 line 16    (R-TBS saturated inserts)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.scipy.special import gammaln
+
+
+def binomial(key: jax.Array, n, p) -> jax.Array:
+    """Exact Binomial(n, p) draw (int32). `n` may be a traced int array."""
+    n = jnp.asarray(n, jnp.float32)
+    p = jnp.asarray(p, jnp.float32)
+    # jax.random.binomial handles n==0 / p in {0,1} correctly and is exact.
+    draw = jax.random.binomial(key, n, jnp.clip(p, 0.0, 1.0))
+    return draw.astype(jnp.int32)
+
+
+def stochastic_round(key: jax.Array, x) -> jax.Array:
+    """StochRound(x): floor(x) + Bernoulli(frac(x)); E[result] == x (paper Sec. 4.1)."""
+    x = jnp.asarray(x, jnp.float32)
+    lo = jnp.floor(x)
+    up = jax.random.bernoulli(key, jnp.clip(x - lo, 0.0, 1.0))
+    return (lo + up).astype(jnp.int32)
+
+
+def _log_comb(n, k):
+    """log C(n, k); requires 0 <= k <= n elementwise (caller guards)."""
+    return gammaln(n + 1.0) - gammaln(k + 1.0) - gammaln(n - k + 1.0)
+
+
+def hypergeometric(key: jax.Array, k, a, b, *, max_support: int) -> jax.Array:
+    """Exact HyperGeo(k, a, b) draw: number of type-`a` items when drawing `k`
+    without replacement from a population of `a` type-a and `b` type-b items.
+
+    Inverse-transform over the support [max(0, k-b), min(a, k)] using the pmf
+    ratio recurrence; `max_support` is a static bound on the support width
+    (use the reservoir/batch capacity). O(max_support) scalar flops.
+    """
+    k = jnp.asarray(k, jnp.float32)
+    a = jnp.asarray(a, jnp.float32)
+    b = jnp.asarray(b, jnp.float32)
+    lo = jnp.maximum(0.0, k - b)
+    hi = jnp.minimum(a, k)
+    u = jax.random.uniform(key, dtype=jnp.float32)
+    logp0 = _log_comb(a, lo) + _log_comb(b, k - lo) - _log_comb(a + b, k)
+
+    def body(i, carry):
+        cdf, logp, val = carry
+        s = lo + i
+        in_support = s <= hi
+        cdf = cdf + jnp.where(in_support, jnp.exp(logp), 0.0)
+        take = (cdf >= u) & (val < 0) & in_support
+        val = jnp.where(take, s, val)
+        # pmf ratio p(s+1)/p(s) = (a-s)(k-s) / ((s+1)(b-k+s+1))
+        num = (a - s) * (k - s)
+        den = (s + 1.0) * (b - k + s + 1.0)
+        ratio = jnp.where((num > 0) & (den > 0), num / den, 1.0)
+        logp = logp + jnp.log(ratio)
+        return cdf, logp, val
+
+    _, _, val = jax.lax.fori_loop(
+        0, max_support + 1, body, (jnp.float32(0.0), logp0, jnp.float32(-1.0))
+    )
+    # Numerical guard: if float32 cdf never crossed u (prob ~1e-6), return hi.
+    val = jnp.where(val < 0, hi, val)
+    return val.astype(jnp.int32)
+
+
+def multivariate_hypergeometric(
+    key: jax.Array, k, counts: jax.Array, *, max_support: int
+) -> jax.Array:
+    """Exact multivariate hypergeometric split: draw `k` items without replacement
+    from groups of sizes ``counts[s]``; return per-group draw counts.
+
+    This is the primitive behind D-R-TBS *distributed decisions* (paper Sec. 5.3):
+    the number of deletes/inserts assigned to each reservoir/batch partition.
+    Decomposed as a chain of conditional (univariate) hypergeometrics; every
+    shard computes the identical split from the same key.
+    """
+    counts = jnp.asarray(counts, jnp.int32)
+    total = jnp.sum(counts)
+    k = jnp.asarray(k, jnp.int32)
+
+    def step(carry, inp):
+        rem_draws, rem_total = carry
+        c_s, key_s = inp
+        other = rem_total - c_s
+        x = hypergeometric(key_s, rem_draws, c_s, other, max_support=max_support)
+        return (rem_draws - x, other), x
+
+    keys = jax.random.split(key, counts.shape[0])
+    (_, _), xs = jax.lax.scan(step, (k, total), (counts, keys))
+    return xs
+
+
+def prefix_permutation(key: jax.Array, cap: int, n) -> jax.Array:
+    """Return an index array idx[cap] whose first `n` entries are a uniform random
+    permutation of {0..n-1} (the valid prefix); entries >= n are the remaining
+    slots in ascending order. `n` may be traced.
+
+    This is the fixed-shape equivalent of the paper's SAMPLE(A, m): take
+    ``idx[:m]`` for a uniform m-subset (in uniform random order) of the n
+    valid slots.
+    """
+    u = jax.random.uniform(key, (cap,), dtype=jnp.float32)
+    slot = jnp.arange(cap, dtype=jnp.int32)
+    sort_key = jnp.where(slot < n, u, 2.0 + slot.astype(jnp.float32))
+    return jnp.argsort(sort_key).astype(jnp.int32)
+
+
+def categorical_from_counts(key: jax.Array, counts: jax.Array) -> jax.Array:
+    """Sample index s with probability counts[s]/sum(counts) (counts int, >=0)."""
+    c = jnp.asarray(counts, jnp.float32)
+    tot = jnp.sum(c)
+    u = jax.random.uniform(key) * jnp.maximum(tot, 1e-30)
+    cdf = jnp.cumsum(c)
+    return jnp.argmax(cdf > u).astype(jnp.int32)

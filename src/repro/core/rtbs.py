@@ -1,0 +1,178 @@
+"""R-TBS: Reservoir-based Time-Biased Sampling (paper Algorithm 2).
+
+The first sampling scheme that simultaneously (i) enforces the exponential
+relative-inclusion criterion (paper eq. (1)) at all times, (ii) guarantees
+|S_t| <= n, and (iii) tolerates unknown / arbitrarily varying arrival rates.
+Invariant maintained (Theorem 4.2):  Pr[i in S_t] = (C_t / W_t) * w_t(i).
+
+Fixed-shape JAX formulation. State:
+  * ``lat`` -- the latent fractional sample (capacity n+1 slots)
+  * ``total_weight`` -- W_t = sum_j B_j e^{-lambda (t-j)}
+
+Each :func:`step` consumes one arriving batch (valid prefix of a fixed-capacity
+buffer) and is fully jit/scan-safe; `vmap` over steps gives Monte-Carlo farms for
+the statistical tests.
+
+Step structure mirrors Alg. 2 exactly:
+  unsaturated (W < n):  decay+downsample, accept all arrivals, then downsample
+                        to n on overshoot (lines 5-12)
+  saturated  (W >= n):  decay W; still saturated -> replace StochRound(B*n/W)
+                        victims with batch items (lines 16-17); undershoot ->
+                        downsample to W - B and accept all arrivals (lines 19-20)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import latent as lt
+from . import rng
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class RTBSState:
+    lat: lt.Latent
+    total_weight: jax.Array  # float32 scalar, W_t
+
+    @property
+    def sample_weight(self) -> jax.Array:  # C_t = min(n, W_t) implicitly == lat.weight
+        return self.lat.weight
+
+
+def init(item_proto: Any, n: int) -> RTBSState:
+    """Empty R-TBS state with max sample size n (buffer capacity n+1)."""
+    return RTBSState(
+        lat=lt.make_empty(item_proto, n + 1), total_weight=jnp.float32(0.0)
+    )
+
+
+def _unsaturated_path(key, lat, w_prev, batch_items, bcount, n, decay):
+    """Paper Alg. 2 lines 5-12 (previously unsaturated: C == W < n)."""
+    k_ds, k_over = jax.random.split(key)
+    w_dec = decay * w_prev
+    # lines 6-8: decay weight, downsample the latent to the decayed weight
+    lat = jax.lax.cond(
+        (w_dec > 0) & (w_dec < lat.weight),
+        lambda: lt.downsample(k_ds, lat, w_dec),
+        lambda: dataclasses.replace(
+            lat, weight=jnp.minimum(lat.weight, jnp.maximum(w_dec, 0.0))
+        ),
+    )
+    # lines 9-10: accept ALL batch items (on a widened temp buffer)
+    bcap = jax.tree_util.tree_leaves(batch_items)[0].shape[0]
+    cap = lat.cap
+    wide = lt.Latent(
+        items=lt.concat_items(
+            lat.items,
+            jax.tree_util.tree_map(lambda b: jnp.zeros_like(b), batch_items),
+        ),
+        nfull=lat.nfull,
+        weight=lat.weight,
+    )
+    wide = lt.insert_full(wide, batch_items, bcount)
+    w_new = w_dec + jnp.asarray(bcount, jnp.float32)
+    # lines 11-12: overshoot -> downsample to n (sample becomes saturated)
+    wide = jax.lax.cond(
+        wide.weight > n,
+        lambda: lt.downsample(k_over, wide, jnp.float32(n)),
+        lambda: wide,
+    )
+    out = lt.Latent(
+        items=lt.truncate_items(wide.items, cap), nfull=wide.nfull, weight=wide.weight
+    )
+    return out, w_new
+
+
+def _saturated_path(key, lat, w_prev, batch_items, bcount, n, decay):
+    """Paper Alg. 2 lines 14-20 (previously saturated: C == n <= W)."""
+    k_m, k_vic, k_pick, k_ds = jax.random.split(key, 4)
+    bcapf = jnp.asarray(bcount, jnp.float32)
+    w_new = decay * w_prev + bcapf
+    cap = lat.cap
+    bcap = jax.tree_util.tree_leaves(batch_items)[0].shape[0]
+
+    def still_saturated():
+        # lines 16-17: replace m = StochRound(B*n/W) victims with batch items
+        m = rng.stochastic_round(k_m, bcapf * n / jnp.maximum(w_new, 1e-30))
+        victims = rng.prefix_permutation(k_vic, cap, lat.nfull)
+        picks = rng.prefix_permutation(k_pick, bcap, bcount)
+        i = jnp.arange(bcap, dtype=jnp.int32)
+        dest = jnp.where(i < m, victims[jnp.minimum(i, cap - 1)], cap)  # cap => drop
+        payload = lt.gather(batch_items, picks)
+        items = jax.tree_util.tree_map(
+            lambda a, b: a.at[dest].set(b, mode="drop"), lat.items, payload
+        )
+        return lt.Latent(items=items, nfull=lat.nfull, weight=jnp.float32(n))
+
+    def undershoot():
+        # lines 19-20: downsample to W' = W - B, then accept all batch items
+        l2 = lt.downsample(k_ds, lat, w_new - bcapf)
+        return lt.insert_full(l2, batch_items, bcount)
+
+    out = jax.lax.cond(w_new >= n, still_saturated, undershoot)
+    return out, w_new
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def step(
+    key: jax.Array,
+    state: RTBSState,
+    batch_items: Any,
+    bcount: jax.Array,
+    *,
+    n: int,
+    lam: float | jax.Array,
+) -> RTBSState:
+    """Advance R-TBS by one batch arrival (paper Algorithm 2).
+
+    ``batch_items``: pytree, leaves [bcap, ...]; valid prefix length ``bcount``.
+    ``lam`` may be a traced scalar; elapsed time between batches is 1 (use
+    lam * dt for irregular arrivals, per paper Sec. 2).
+    """
+    decay = jnp.exp(-jnp.asarray(lam, jnp.float32))
+    bcount = jnp.asarray(bcount, jnp.int32)
+    was_unsat = state.total_weight < n
+    lat, w_new = jax.lax.cond(
+        was_unsat,
+        lambda: _unsaturated_path(
+            key, state.lat, state.total_weight, batch_items, bcount, n, decay
+        ),
+        lambda: _saturated_path(
+            key, state.lat, state.total_weight, batch_items, bcount, n, decay
+        ),
+    )
+    return RTBSState(lat=lat, total_weight=w_new)
+
+
+def realize(key: jax.Array, state: RTBSState) -> tuple[jax.Array, jax.Array]:
+    """Draw the actual sample S_t: (mask over the n+1 slots, |S_t|)."""
+    return lt.realize(key, state.lat)
+
+
+def run_stream(
+    key: jax.Array,
+    state: RTBSState,
+    batches: Any,
+    bcounts: jax.Array,
+    *,
+    n: int,
+    lam: float,
+) -> tuple[RTBSState, dict]:
+    """Scan ``step`` over a stream of T batches; returns final state + per-step
+    trace (sample weight C_t, total weight W_t, realized size E via C)."""
+
+    def body(carry, inp):
+        st = carry
+        items_t, cnt_t, key_t = inp
+        st = step(key_t, st, items_t, cnt_t, n=n, lam=lam)
+        return st, {"C": st.lat.weight, "W": st.total_weight}
+
+    T = bcounts.shape[0]
+    keys = jax.random.split(key, T)
+    final, trace = jax.lax.scan(body, state, (batches, bcounts, keys))
+    return final, trace

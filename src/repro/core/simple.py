@@ -1,0 +1,183 @@
+"""The simpler members of the TBS family, in fixed-shape JAX form:
+
+  * T-TBS  -- Targeted-size TBS (paper Algorithm 1): enforces eq. (1) exactly,
+              controls sample size only probabilistically (Theorem 3.1), needs
+              the mean batch size `b` known & constant.
+  * B-TBS  -- Bernoulli TBS (paper Algorithm 4 / [32]): T-TBS with q == 1;
+              no independent sample-size control.
+  * B-RS   -- Batched reservoir sampling (paper Algorithm 5): bounds size,
+              no time biasing (the paper's "Unif" baseline).
+  * SW     -- sliding window over the last n items (the paper's "SW" baseline).
+
+All share one state encoding: a fixed-capacity item buffer with a valid-prefix
+count. T-TBS/B-TBS sample sizes are UNBOUNDED in theory (Thm 3.1(i)); the fixed
+capacity is a deliberately visible engineering bound -- overflowing inserts are
+dropped and counted in ``overflow`` so experiments can surface exactly the
+failure mode the paper warns about (Fig. 1(a)).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import latent as lt
+from . import rng
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class BufferState:
+    items: Any              # pytree, leaves [cap, ...]
+    count: jax.Array        # int32 valid prefix
+    total_weight: jax.Array  # float32 (B-RS: item count W; others: unused 0)
+    overflow: jax.Array     # int32 cumulative dropped-by-capacity inserts
+
+
+def init(item_proto: Any, cap: int) -> BufferState:
+    items = jax.tree_util.tree_map(
+        lambda p: jnp.zeros((cap,) + tuple(p.shape), p.dtype), item_proto
+    )
+    return BufferState(
+        items=items,
+        count=jnp.int32(0),
+        total_weight=jnp.float32(0.0),
+        overflow=jnp.int32(0),
+    )
+
+
+def _compact_keep(key, items, count, keep):
+    """Keep a uniform random `keep`-subset of the `count` valid items, compacted
+    to the buffer head. Returns (items, keep)."""
+    cap = jax.tree_util.tree_leaves(items)[0].shape[0]
+    perm = rng.prefix_permutation(key, cap, count)
+    return lt.gather(items, perm), keep
+
+
+def _append(items, count, batch_items, picks, k):
+    """Append k batch items (batch slots picks[:k]) at the buffer tail; drop and
+    count items beyond capacity."""
+    cap = jax.tree_util.tree_leaves(items)[0].shape[0]
+    bcap = jax.tree_util.tree_leaves(batch_items)[0].shape[0]
+    i = jnp.arange(bcap, dtype=jnp.int32)
+    dest = jnp.where(i < k, count + i, cap)
+    dropped = jnp.maximum(count + k - cap, 0)
+    payload = lt.gather(batch_items, picks)
+    items = jax.tree_util.tree_map(
+        lambda a, b: a.at[dest].set(b, mode="drop"), items, payload
+    )
+    new_count = jnp.minimum(count + k, cap)
+    return items, new_count, dropped
+
+
+@functools.partial(jax.jit, static_argnames=())
+def ttbs_step(
+    key: jax.Array,
+    state: BufferState,
+    batch_items: Any,
+    bcount: jax.Array,
+    *,
+    p: jax.Array,
+    q: jax.Array,
+) -> BufferState:
+    """Paper Algorithm 1. p = e^{-lambda}; q = n(1-e^{-lambda})/b."""
+    k_ret, k_perm, k_acc, k_pick = jax.random.split(key, 4)
+    bcap = jax.tree_util.tree_leaves(batch_items)[0].shape[0]
+    # line 6-7: retain m ~ Binomial(|S|, p) random current items
+    m = rng.binomial(k_ret, state.count, p)
+    items, _ = _compact_keep(k_perm, state.items, state.count, m)
+    # line 8-9: accept k ~ Binomial(|B_t|, q) random batch items
+    k = rng.binomial(k_acc, bcount, q)
+    picks = rng.prefix_permutation(k_pick, bcap, bcount)
+    items, new_count, dropped = _append(items, m, batch_items, picks, k)
+    return BufferState(
+        items=items,
+        count=new_count,
+        total_weight=state.total_weight,
+        overflow=state.overflow + dropped,
+    )
+
+
+def btbs_step(key, state, batch_items, bcount, *, p):
+    """Paper Algorithm 4 (B-TBS) == T-TBS with acceptance probability q = 1."""
+    return ttbs_step(key, state, batch_items, bcount, p=p, q=jnp.float32(1.0))
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def brs_step(
+    key: jax.Array,
+    state: BufferState,
+    batch_items: Any,
+    bcount: jax.Array,
+    *,
+    n: int,
+) -> BufferState:
+    """Paper Algorithm 5 (batched classical reservoir sampling; "Unif")."""
+    k_hg, k_perm, k_pick = jax.random.split(key, 3)
+    bcount = jnp.asarray(bcount, jnp.int32)
+    W = state.total_weight  # = number of items seen so far
+    bf = bcount.astype(jnp.float32)
+    C = jnp.minimum(jnp.float32(n), W + bf)  # new sample size (line 4)
+    cap = jax.tree_util.tree_leaves(state.items)[0].shape[0]
+    bcap = jax.tree_util.tree_leaves(batch_items)[0].shape[0]
+    # line 5: M ~ HyperGeo(C, |B_t|, W) -- number of new-batch items in the sample
+    M = rng.hypergeometric(
+        k_hg, C.astype(jnp.int32), bcount, W.astype(jnp.int32), max_support=bcap
+    )
+    # line 6: keep min(n - M, |S|) old items, add M batch items
+    keep = jnp.minimum(jnp.int32(n) - M, state.count)
+    items, _ = _compact_keep(k_perm, state.items, state.count, keep)
+    picks = rng.prefix_permutation(k_pick, bcap, bcount)
+    items, new_count, dropped = _append(items, keep, batch_items, picks, M)
+    return BufferState(
+        items=items,
+        count=new_count,
+        total_weight=W + bf,
+        overflow=state.overflow + dropped,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def sw_step(
+    key: jax.Array,
+    state: BufferState,
+    batch_items: Any,
+    bcount: jax.Array,
+    *,
+    n: int,
+) -> BufferState:
+    """Sliding window over the last n items (paper baseline "SW").
+
+    Items within the buffer are kept in arrival order (oldest first)."""
+    del key  # deterministic
+    bcount = jnp.asarray(bcount, jnp.int32)
+    cap = jax.tree_util.tree_leaves(state.items)[0].shape[0]
+    bcap = jax.tree_util.tree_leaves(batch_items)[0].shape[0]
+    n32 = jnp.int32(n)
+    keep_old = jnp.clip(n32 - bcount, 0, state.count)
+    # oldest of the kept = count - keep_old .. count
+    src = jnp.arange(cap, dtype=jnp.int32) + (state.count - keep_old)
+    src = jnp.where(jnp.arange(cap) < keep_old, src, 0)
+    items = lt.gather(state.items, src)
+    take_new = jnp.minimum(bcount, n32)
+    # newest take_new batch items = batch slots [bcount - take_new, bcount)
+    bsrc = jnp.arange(bcap, dtype=jnp.int32) + (bcount - take_new)
+    bsrc = jnp.clip(bsrc, 0, bcap - 1)
+    items, new_count, dropped = _append(
+        items, keep_old, batch_items, bsrc, take_new
+    )
+    return BufferState(
+        items=items,
+        count=new_count,
+        total_weight=state.total_weight + bcount.astype(jnp.float32),
+        overflow=state.overflow + dropped,
+    )
+
+
+def realize_all(state: BufferState) -> tuple[jax.Array, jax.Array]:
+    """(mask over cap slots, count): these schemes' samples are their buffers."""
+    cap = jax.tree_util.tree_leaves(state.items)[0].shape[0]
+    return jnp.arange(cap) < state.count, state.count

@@ -1,0 +1,6 @@
+from . import streams  # noqa: F401
+from .streams import (  # noqa: F401
+    GMMStream, LinRegStream, UsenetLikeStream, TokenDriftStream,
+    batch_size_schedule, mode_schedule,
+)
+from .pipeline import StreamPipeline  # noqa: F401

@@ -1,0 +1,16 @@
+"""Pallas TPU kernels for the perf-critical compute hot spots.
+
+  * flash_attention  -- blocked online-softmax attention (causal/SWA/GQA):
+                        MXU-aligned [block_q, block_k] tiles resident in VMEM,
+                        scores never touch HBM.
+  * ssd_scan         -- Mamba2 SSD chunked scan: per-chunk quadratic intra
+                        work + the inter-chunk state recurrence carried in a
+                        VMEM scratch accumulator.
+  * reservoir_compact -- the paper-specific kernel: fused keep-mask prefix-sum
+                        + one-hot-matmul compaction of reservoir buffers (the
+                        TPU-native replacement for Spark's in-place RDD update
+                        trick; DESIGN.md Sec. 3).
+
+Each kernel ships ``ops.py`` (jit wrapper, interpret=True fallback on CPU) and
+``ref.py`` (pure-jnp oracle); tests sweep shapes/dtypes with assert_allclose.
+"""

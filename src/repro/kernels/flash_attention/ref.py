@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal=True, window=0):
+    """q [B,S,H,hd]; k,v [B,T,KV,hd] -> [B,S,H,hd] (f32 softmax)."""
+    B, S, H, hd = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, S, KV, G, hd)
+    s = jnp.einsum("bskgh,btkh->bkgst", qg, k).astype(jnp.float32)
+    s = s / jnp.sqrt(jnp.float32(hd))
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(T)[None, :]
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None, None, None], s, jnp.float32(-1e30))
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgst,btkh->bskgh", p, v)
+    return out.reshape(B, S, H, hd)

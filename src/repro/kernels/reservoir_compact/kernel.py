@@ -1,0 +1,76 @@
+"""Reservoir compaction Pallas-TPU kernel -- the paper-specific hot spot.
+
+Every R-TBS downsample/delete pass must compact surviving reservoir items to
+the buffer head (the Spark implementation's in-place RDD update, Sec. 5.2/E.2
+of the paper, reborn for fixed-shape TPU buffers). The fused kernel streams
+item blocks through VMEM once: per block it computes the keep-mask prefix sum
+(running offset carried in SMEM-like scratch across the sequential grid) and
+scatters survivors via a one-hot matmul (selection matrices are MXU work, the
+TPU-native substitute for vector scatter).
+
+Payload rows move HBM->VMEM->HBM exactly once; the selection one-hot is
+[block, cap] and never leaves VMEM."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(items_ref, mask_ref, out_ref, cnt_ref, off_ref, *, block, cap, nb):
+    bi = pl.program_id(0)
+
+    @pl.when(bi == 0)
+    def _init():
+        off_ref[...] = jnp.zeros_like(off_ref)
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    items = items_ref[...]                       # [block, D]
+    mask = mask_ref[...][:, 0]                   # [block] int32 0/1
+    excl = jnp.cumsum(mask) - mask               # exclusive prefix sum
+    pos = off_ref[0, 0] + excl                   # global dest slot per row
+    # one-hot selection: sel[i, j] = keep_i and pos_i == j  -> out += sel^T @ x
+    jj = jax.lax.broadcasted_iota(jnp.int32, (block, cap), 1)
+    sel = ((jj == pos[:, None]) & (mask[:, None] > 0)).astype(items.dtype)
+    out_ref[...] += jax.lax.dot_general(
+        sel, items, (((0,), (0,)), ((), ())),
+        preferred_element_type=out_ref.dtype,
+    )
+    off_ref[0, 0] = off_ref[0, 0] + jnp.sum(mask)
+
+    @pl.when(bi == nb - 1)
+    def _emit():
+        cnt_ref[0, 0] = off_ref[0, 0]
+
+
+def compact(items, mask, *, block=128, interpret=False):
+    """items [cap, D]; mask [cap] bool -> (compacted [cap, D], count int32).
+    Surviving rows keep their relative order (stable compaction)."""
+    cap, D = items.shape
+    b = min(block, cap)
+    assert cap % b == 0
+    nb = cap // b
+    mask_i = mask.astype(jnp.int32).reshape(cap, 1)
+
+    out, cnt = pl.pallas_call(
+        functools.partial(_kernel, block=b, cap=cap, nb=nb),
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((b, D), lambda bi: (bi, 0)),
+            pl.BlockSpec((b, 1), lambda bi: (bi, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((cap, D), lambda bi: (0, 0)),
+            pl.BlockSpec((1, 1), lambda bi: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((cap, D), items.dtype),
+            jax.ShapeDtypeStruct((1, 1), jnp.int32),
+        ],
+        scratch_shapes=[pltpu.VMEM((1, 1), jnp.int32)],
+        interpret=interpret,
+    )(items, mask_i)
+    return out, cnt[0, 0]

@@ -1,0 +1,18 @@
+"""jit wrapper for reservoir compaction (CPU interpret fallback)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from . import kernel
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def reservoir_compact(items, mask, *, block=128):
+    """items [cap, D]; mask [cap] bool -> (compacted [cap, D], count)."""
+    return kernel.compact(items, mask, block=block, interpret=_on_cpu())

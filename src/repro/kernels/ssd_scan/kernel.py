@@ -1,0 +1,101 @@
+"""Mamba2 SSD chunked-scan Pallas-TPU kernel.
+
+Grid = (batch*heads, n_chunks) with the chunk axis innermost/sequential: the
+[N, P] state accumulator lives in VMEM scratch and is carried across chunks,
+so the recurrence never round-trips HBM. Per chunk the kernel computes the
+intra-chunk quadratic part (C.B decay-weighted scores on the MXU), the
+inter-chunk contribution from the carried state, and the state update.
+
+Layouts: x [BH, S, P]; dt [BH, S, 1]; A [H, 1]; B,C [BG, S, N] (the BlockSpec
+index map sends head bh -> group (bh % H) // (H // G))."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, st_ref, state_ref, *,
+            Q, N, P, nc):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0].astype(jnp.float32)        # [Q, P]
+    dt = dt_ref[0][:, 0].astype(jnp.float32)  # [Q]
+    a = a_ref[0, 0]                          # scalar A_h (negative)
+    Bm = b_ref[0].astype(jnp.float32)        # [Q, N]
+    Cm = c_ref[0].astype(jnp.float32)        # [Q, N]
+
+    la = dt * a                              # [Q] log-decay per token
+    cl = jnp.cumsum(la)                      # [Q]
+    # intra-chunk: scores[i,j] = (C_i.B_j) exp(cl_i - cl_j) dt_j, j <= i
+    cb = jax.lax.dot_general(
+        Cm, Bm, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )                                        # [Q, Q]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    decay = jnp.exp(cl[:, None] - cl[None, :])
+    scores = jnp.where(ii >= jj, cb * decay * dt[None, :], 0.0)
+    y = jax.lax.dot_general(
+        scores, x, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )                                        # [Q, P]
+    # inter-chunk: y_i += exp(cl_i) * C_i . state
+    state = state_ref[...]                   # [N, P]
+    y += jnp.exp(cl)[:, None] * jax.lax.dot_general(
+        Cm, state, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    # state update: state = exp(cl_last) state + sum_j exp(cl_last - cl_j) dt_j B_j x_j
+    w = jnp.exp(cl[-1] - cl) * dt            # [Q]
+    state_ref[...] = state * jnp.exp(cl[-1]) + jax.lax.dot_general(
+        Bm * w[:, None], x, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    @pl.when(ci == nc - 1)
+    def _emit_state():
+        st_ref[0] = state_ref[...].astype(st_ref.dtype)
+
+
+def ssd_scan_bhsp(x, dt, a, Bm, Cm, *, chunk=256, interpret=False,
+                  num_heads=None, num_groups=None):
+    """x [BH,S,P]; dt [BH,S,1]; a [H,1]; Bm/Cm [BG,S,N] -> (y [BH,S,P],
+    final state [BH,N,P])."""
+    BH, S, P = x.shape
+    N = Bm.shape[-1]
+    H = num_heads
+    G = num_groups
+    rep = H // G
+    Q = min(chunk, S)
+    assert S % Q == 0
+    nc = S // Q
+
+    grid = (BH, nc)
+    y, st = pl.pallas_call(
+        functools.partial(_kernel, Q=Q, N=N, P=P, nc=nc),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, Q, P), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, Q, 1), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, 1), lambda bh, ci: (bh % H, 0)),
+            pl.BlockSpec((1, Q, N), lambda bh, ci: ((bh // H) * G + (bh % H) // rep, ci, 0)),
+            pl.BlockSpec((1, Q, N), lambda bh, ci: ((bh // H) * G + (bh % H) // rep, ci, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, Q, P), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, N, P), lambda bh, ci: (bh, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(x.shape, x.dtype),
+            jax.ShapeDtypeStruct((BH, N, P), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, a, Bm, Cm)
+    return y, st

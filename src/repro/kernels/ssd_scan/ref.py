@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the SSD kernel: the exact per-token recurrence
+    state_t = exp(dt_t * A) state_{t-1} + dt_t * B_t (x) x_t
+    y_t     = C_t . state_t
+(linear scan; numerically the ground truth the chunked forms must match)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x, dt, a, Bm, Cm):
+    """x [BH,S,P]; dt [BH,S]; a [BH]; Bm/Cm [BH,S,N] (pre-broadcast per head)
+    -> (y [BH,S,P], final state [BH,N,P])."""
+    BH, S, P = x.shape
+    N = Bm.shape[-1]
+
+    def step(state, inp):
+        x_t, dt_t, b_t, c_t = inp  # [BH,P],[BH],[BH,N],[BH,N]
+        da = jnp.exp(dt_t * a)     # [BH]
+        state = state * da[:, None, None] + jnp.einsum(
+            "b,bn,bp->bnp", dt_t, b_t, x_t
+        )
+        y_t = jnp.einsum("bn,bnp->bp", c_t, state)
+        return state, y_t
+
+    s0 = jnp.zeros((BH, N, P), jnp.float32)
+    xs = (
+        x.swapaxes(0, 1).astype(jnp.float32),
+        dt.swapaxes(0, 1).astype(jnp.float32),
+        Bm.swapaxes(0, 1).astype(jnp.float32),
+        Cm.swapaxes(0, 1).astype(jnp.float32),
+    )
+    state, ys = jax.lax.scan(step, s0, xs)
+    return ys.swapaxes(0, 1).astype(x.dtype), state

@@ -1,0 +1,5 @@
+"""Launchers: production mesh, multi-pod dry-run, streaming train driver.
+
+NOTE: importing these modules never touches jax device state; meshes are built
+inside functions (dryrun.py forces its 512 host devices before any import).
+"""

@@ -1,0 +1,497 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import: jax locks the device count on first init.
+# The dry-run (and ONLY the dry-run) builds the production 512-chip mesh out of
+# host placeholder devices; smoke tests and benchmarks see the default 1.
+
+import argparse            # noqa: E402
+import dataclasses         # noqa: E402
+import json                # noqa: E402
+import pathlib             # noqa: E402
+import time                # noqa: E402
+import traceback           # noqa: E402
+
+import jax                 # noqa: E402
+import jax.numpy as jnp    # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro import config as C      # noqa: E402
+from repro import sharding as SH   # noqa: E402
+from repro.launch import hlo_analysis, hw  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models import zoo       # noqa: E402
+from repro.optim import AdamWConfig, adamw_init  # noqa: E402
+from repro.train.steps import make_decode_step, make_prefill_step, make_train_step  # noqa: E402
+
+# Gradient-accumulation factors for train_4k (activation-memory knob; see
+# EXPERIMENTS.md §Dry-run memory table). Keys absent -> 1.
+MICROBATCHES = {
+    "mistral_large_123b": 16,
+    "mixtral_8x22b": 8,
+    "command_r_35b": 8,
+    "granite_20b": 8,
+    "stablelm_12b": 16,
+    "zamba2_2p7b": 4,
+    "qwen2_vl_2b": 4,
+    "granite_moe_3b": 4,
+    "whisper_large_v3": 4,
+    "mamba2_370m": 2,
+}
+
+# paper-faithful baseline knobs applied to every cell (hillclimb variants
+# override these via --override / the §Perf scripts)
+BASE_OVERRIDES = {"attn_chunk": 2048}
+
+
+def _shardings(mesh, spec_tree):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def cost_depths(cfg):
+    """(L1-overrides, L2-overrides, n_units_full, n_units(L1), n_units(L2)) for
+    the two unrolled cost compiles. Layer stacks are homogeneous, so the
+    difference of two depths gives the exact per-unit cost (the embed/logits
+    ends cancel); hybrid uses whole groups and enc-dec uses (enc,dec) pairs."""
+    if cfg.family == "hybrid":
+        k = cfg.attn_every
+        g_full = cfg.num_layers // k
+        return ({"num_layers": k}, {"num_layers": 2 * k}, g_full, 1, 2)
+    if cfg.is_encoder_decoder:
+        return (
+            {"num_layers": 2, "encoder_layers": 2},
+            {"num_layers": 4, "encoder_layers": 4},
+            cfg.num_layers, 2, 4,
+        )
+    l1 = min(2, cfg.num_layers)
+    l2 = min(6, cfg.num_layers)
+    if l1 == l2:
+        l1 = 1
+    return ({"num_layers": l1}, {"num_layers": l2}, cfg.num_layers, l1, l2)
+
+
+def build_cell(arch: str, shape_name: str, mesh, *, overrides=None,
+               variant: str = "cost"):
+    """Construct (lower-ready fn, arg SDS tree, in/out shardings) for a cell.
+
+    Cost-fidelity scheme (EXPERIMENTS.md §Dry-run methodology): XLA's
+    HloCostAnalysis counts while-loop bodies ONCE, so per cell we compile
+      * 'mem' variant: full depth, scanned layers, true grad-accumulation ->
+        memory_analysis (the realistic peak footprint), and
+      * two 'cost' variants: UNROLLED layer stacks at two small depths, one
+        microbatch -> exact per-layer FLOPs/bytes/collectives by difference,
+        extrapolated linearly in depth (layers are homogeneous).
+    Inner chunk scans (online-softmax attention, SSD) stay scanned and get
+    documented analytic corrections."""
+    cfg = C.get_config(arch)
+    shape = C.SHAPES[shape_name]
+    mi = SH.mesh_info(mesh)
+    dp = 1
+    for a in mi.batch_axes:
+        dp *= mi.axis_sizes[a]
+
+    over0 = dict(overrides or {})
+    mb_override = over0.pop("microbatches", None)
+    mb = mb_override or (MICROBATCHES.get(arch, 1) if shape.kind == "train" else 1)
+    fold_mb = variant != "mem"
+    if shape.kind == "train" and mb > 1 and fold_mb:
+        shape = dataclasses.replace(shape, global_batch=shape.global_batch // mb)
+
+    over = over0
+    # decode mem-variant also unrolls: scanned cache carries defeat XLA's
+    # donation-based in-place cache updates (spurious temp copies)
+    over.setdefault(
+        "scan_layers", variant == "mem" and shape.kind != "decode"
+    )
+    if shape.kind == "decode":
+        KV = cfg.num_kv_heads
+        if KV and SH.head_mode(cfg, mi.tp) == "heads_qonly" and mi.tp % KV == 0:
+            over.setdefault("kv_replication", mi.tp // KV)
+    if cfg.num_experts:
+        over.setdefault("moe_groups", min(dp, shape.global_batch))
+    cfg = dataclasses.replace(cfg, **over)
+    api = zoo.build(cfg)
+
+    params_sds = jax.eval_shape(api.init_params, jax.random.key(0))
+    pspecs = SH.param_pspecs(cfg, params_sds, mi)
+    psh = _shardings(mesh, pspecs)
+    batch_sds = zoo.input_specs(cfg, shape)
+    bsh = _shardings(mesh, SH.batch_pspecs(cfg, batch_sds, mi))
+
+    if shape.kind == "train":
+        opt_sds = jax.eval_shape(adamw_init, params_sds)
+        osh = {"m": psh, "v": psh, "count": NamedSharding(mesh, P())}
+        step = make_train_step(
+            api, AdamWConfig(), microbatches=(mb if not fold_mb else 1)
+        )
+        fn = jax.jit(
+            step,
+            in_shardings=(psh, osh, bsh),
+            out_shardings=(psh, osh, None),
+            donate_argnums=(0, 1),
+        )
+        args = (params_sds, opt_sds, batch_sds)
+    elif shape.kind == "prefill":
+        step = make_prefill_step(api, max_len=shape.seq_len)
+        fn = jax.jit(step, in_shardings=(psh, bsh), out_shardings=None)
+        args = (params_sds, batch_sds)
+    else:  # decode
+        caches_sds = jax.eval_shape(
+            lambda: api.init_decode_state(
+                shape.global_batch,
+                max_len=shape.seq_len + 1,
+                prefill_len=shape.seq_len,
+            )
+        )
+        csh = _shardings(mesh, SH.cache_pspecs(cfg, caches_sds, mi))
+        tok_sds = {"tok": jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)}
+        tsh = _shardings(mesh, SH.batch_pspecs(cfg, tok_sds, mi))["tok"]
+        step = make_decode_step(api)
+        fn = jax.jit(
+            step,
+            in_shardings=(psh, csh, tsh),
+            out_shardings=(tsh, csh),
+            donate_argnums=(1,),
+        )
+        args = (params_sds, caches_sds, tok_sds["tok"])
+    return cfg, shape, fn, args, mb
+
+
+def model_flops(cfg, shape, mb) -> float:
+    """Analytic MODEL_FLOPS: 6*N*D train (N = active params for MoE),
+    2*N*D for forward-only (prefill/decode). shape is PRE-microbatch-fold."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    return 2.0 * n * shape.global_batch  # decode: one token per sequence
+
+
+def inner_scan_correction(cfg, shape, mb) -> float:
+    """Analytic TOTAL-FLOPs correction for loop bodies HloCostAnalysis counts
+    once (documented in EXPERIMENTS.md §Dry-run):
+
+      * online-softmax chunked attention (S >= attn_chunk): missing
+        4*B*hd*H*(S*T - bq*bk) per attention call
+      * SSD chunk scan: missing (nc-1) x per-chunk body per Mamba2 layer
+
+    Training multiplies by 4 (fwd + remat recompute + ~2x bwd); forward-only
+    by 1. Corrections use the same unmasked-causal convention as the HLO."""
+    mult = 4.0 if shape.kind == "train" else 1.0
+    B_eff = shape.global_batch // (mb if shape.kind == "train" else 1)
+    S = shape.seq_len if shape.kind != "decode" else 1
+    total = 0.0
+    # chunked attention
+    if shape.kind in ("train", "prefill") and cfg.num_heads:
+        bq = bk = cfg.attn_chunk
+        if cfg.attn_chunk and S >= cfg.attn_chunk:
+            T_len = S
+            H, hd = cfg.num_heads, cfg.resolved_head_dim
+            per_call = 4.0 * B_eff * hd * H * (S * T_len - bq * bk)
+            if cfg.family == "hybrid":
+                ncalls = cfg.num_layers // cfg.attn_every
+            elif cfg.family == "audio":
+                ncalls = cfg.num_layers  # decoder self-attn (encoder is 1500)
+            else:
+                ncalls = cfg.num_layers
+            total += per_call * ncalls
+    # SSD chunks
+    if cfg.ssm_state and shape.kind in ("train", "prefill"):
+        Q = min(cfg.ssm_chunk, S)
+        nc = max(S // Q, 1)
+        if nc > 1:
+            G_, N_ = cfg.ssm_groups, cfg.ssm_state
+            H_, P_ = cfg.ssm_heads, cfg.ssm_head_dim
+            body = B_eff * (
+                2.0 * Q * Q * G_ * N_       # C.B scores
+                + 2.0 * Q * Q * H_ * P_     # y_intra
+                + 2.0 * Q * H_ * N_ * P_    # y_inter
+                + 2.0 * Q * H_ * N_ * P_    # state update
+            )
+            total += (nc - 1) * body * cfg.num_layers
+    return total * mult * (mb if shape.kind == "train" else 1)
+
+
+def _compile_once(arch, shape_name, mesh, pod_size, overrides, variant):
+    t0 = time.time()
+    cfg, shape, fn, args, mb = build_cell(
+        arch, shape_name, mesh, overrides=overrides, variant=variant
+    )
+    with mesh:
+        lowered = fn.lower(*args)
+        compiled = lowered.compile()
+    t_compile = time.time() - t0
+    cost = compiled.cost_analysis() or {}
+    mem = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    colls = hlo_analysis.collective_stats(hlo, pod_size=pod_size)
+    return {
+        "cfg": cfg,
+        "mb": mb,
+        "t_compile": t_compile,
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "coll": colls["bytes"],
+        "coll_counts": colls["counts"],
+        "mem": mem,
+        "hlo_len": len(hlo),
+    }
+
+
+def _extrapolate(c1, c2, u1, u2, u_full):
+    """Linear-in-depth extrapolation of per-device costs from two unrolled
+    compiles (exact for homogeneous layer stacks: the ends cancel)."""
+    def ex(a, b):
+        per = (b - a) / max(u2 - u1, 1)
+        return max(a + per * (u_full - u1), 0.0)
+
+    coll_keys = set(c1["coll"]) | set(c2["coll"])
+    return {
+        "flops": ex(c1["flops"], c2["flops"]),
+        "bytes": ex(c1["bytes"], c2["bytes"]),
+        "coll": {
+            k: ex(c1["coll"].get(k, 0.0), c2["coll"].get(k, 0.0))
+            for k in coll_keys
+        },
+    }
+
+
+def analytic_hbm_bytes(cfg, shape, mb, mi) -> float:
+    """Per-device-per-step HBM traffic model for the TPU target (documented in
+    EXPERIMENTS.md §Roofline). XLA-CPU's 'bytes accessed' is fusion-naive
+    (~100x TPU reality), so the memory roofline term uses this analytic model;
+    the raw XLA number is kept in the artifact for reference.
+
+    Terms: FSDP-gathered weight traffic, optimizer pass, per-layer activation
+    streams, dense-attention score streams (only when the dense path is used;
+    chunked/flash keeps scores in VMEM), logits, KV/SSM cache traffic."""
+    dp = 1
+    for a in mi.batch_axes:
+        dp *= mi.axis_sizes[a]
+    tp = mi.tp
+    P = cfg.param_count()
+    B, S = shape.global_batch, shape.seq_len
+    Vp, D = cfg.padded_vocab, cfg.d_model
+    L = cfg.num_layers
+
+    if shape.kind == "decode":
+        # weight-read bound: every active weight read once per token step
+        w = cfg.active_param_count() / (dp * tp) * 2
+        cache = 0.0
+        if cfg.num_heads:
+            T = min(shape.seq_len, cfg.sliding_window or shape.seq_len)
+            KVh = cfg.num_kv_heads * cfg.kv_replication
+            kv_shard = tp if (KVh % tp == 0) else (
+                tp if cfg.resolved_head_dim % tp == 0 else 1)
+            ncaches = (L // cfg.attn_every) if cfg.family == "hybrid" else L
+            cache += (B / dp) * T * KVh * cfg.resolved_head_dim * 2 * 2 \
+                * ncaches / kv_shard
+            if cfg.is_encoder_decoder:
+                cache += (B / dp) * cfg.encoder_seq * KVh \
+                    * cfg.resolved_head_dim * 2 * 2 * L / kv_shard
+        if cfg.ssm_state:
+            h_shard = tp if cfg.ssm_heads % tp == 0 else 1
+            cache += (B / dp) * cfg.ssm_heads * cfg.ssm_state \
+                * cfg.ssm_head_dim * 4 * L / h_shard
+        logits = (B / dp) * Vp / tp * 4
+        return w + cache + logits
+
+    passes = 3.0 if shape.kind == "train" else 1.0
+    B_micro = B // (mb if shape.kind == "train" else 1)
+    tok_loc = B_micro * S / dp
+    # FSDP-gathered weights: one gathered copy per pass per microbatch
+    weights = (P / tp) * 2 * (passes + 1)
+    # activations: ~alpha streamed [tok, D] tensors per layer per pass
+    alpha = 16 if cfg.num_experts else 10
+    acts = alpha * tok_loc * D * 2 * passes * L
+    # dense-attention scores hit HBM only when the dense path is used
+    scores = 0.0
+    if cfg.num_heads and (not cfg.attn_chunk or S < cfg.attn_chunk):
+        H_loc = cfg.num_heads / (tp if cfg.num_heads % tp == 0 else 1)
+        ncalls = (L // cfg.attn_every) if cfg.family == "hybrid" else L
+        scores = 2 * (B_micro / dp) * H_loc * S * S * 4 * passes * ncalls
+    logits = tok_loc * (Vp / tp) * 4 * passes
+    per_micro = acts + scores + logits + weights
+    total = per_micro * (mb if shape.kind == "train" else 1)
+    if shape.kind == "train":
+        total += P / (dp * tp) * 4 * 6  # optimizer read/write p,m,v
+    return total
+
+
+def run_cell(arch, shape_name, mesh_name, outdir, *, overrides=None, tag=""):
+    multi = mesh_name == "multi"
+    mesh = make_production_mesh(multi_pod=multi)
+    nchips = mesh.devices.size
+    pod_size = 256 if multi else 1 << 30
+    shape_full = C.SHAPES[shape_name]
+
+    overrides = {**BASE_OVERRIDES, **(overrides or {})}
+    # (1) memory-fidelity compile: full depth, scanned, true grad accumulation.
+    # This is the REAL production program -- for the multi-pod mesh this single
+    # compile is the deliverable (proves the pod axis shards); the roofline
+    # table is single-pod only (assignment), so cost extrapolation runs there.
+    memrec = _compile_once(arch, shape_name, mesh, pod_size, overrides, "mem")
+    mem = memrec["mem"]
+    mb = memrec["mb"]
+    cfg_full = memrec["cfg"]
+    o1, o2, u_full, u1, u2 = cost_depths(cfg_full)
+    base = dict(overrides or {})
+    if mesh_name == "multi":
+        c1 = c2 = memrec
+        u1 = u2 = u_full  # no extrapolation: report the scanned program's stats
+    else:
+        # (2)+(3) cost-fidelity compiles: unrolled at two depths, extrapolate
+        c1 = _compile_once(arch, shape_name, mesh, pod_size, {**base, **o1}, "cost")
+        c2 = _compile_once(arch, shape_name, mesh, pod_size, {**base, **o2}, "cost")
+    ext = _extrapolate(c1, c2, u1, u2, u_full)
+
+    # a full step is mb identical microbatches (+ optimizer, already counted)
+    flops_dev = ext["flops"] * mb
+    bytes_xla = ext["bytes"] * mb
+    mi = SH.mesh_info(mesh)
+    bytes_dev = analytic_hbm_bytes(cfg_full, shape_full, mb, mi)
+    coll_bytes = {k: v * mb for k, v in ext["coll"].items()}
+    corr_total = inner_scan_correction(cfg_full, shape_full, mb)
+    flops_dev_corr = flops_dev + corr_total / nchips
+    mf = model_flops(cfg_full, shape_full, mb)
+
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_name,
+        "tag": tag,
+        "chips": int(nchips),
+        "microbatches": mb,
+        "params": cfg_full.param_count(),
+        "active_params": cfg_full.active_param_count(),
+        "compile_s": {
+            "mem": round(memrec["t_compile"], 2),
+            "cost_l1": round(c1["t_compile"], 2),
+            "cost_l2": round(c2["t_compile"], 2),
+        },
+        "cost_extrapolation": {"u1": u1, "u2": u2, "u_full": u_full},
+        "flops_per_device_raw": flops_dev,
+        "flops_per_device": flops_dev_corr,
+        "inner_scan_correction_total": corr_total,
+        "hbm_bytes_per_device": bytes_dev,
+        "hbm_bytes_xla_raw": bytes_xla,
+        "collectives": {"bytes": coll_bytes, "counts": c2["coll_counts"]},
+        "model_flops_total": mf,
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "peak_est_bytes": mem.argument_size_in_bytes
+            + mem.output_size_in_bytes
+            + mem.temp_size_in_bytes
+            - mem.alias_size_in_bytes,
+        },
+        "hlo_bytes": memrec["hlo_len"],
+    }
+    # roofline terms (seconds) -- single-pod convention per the assignment
+    rec["roofline_valid"] = mesh_name == "single"
+    rec["roofline"] = {
+        "t_compute": flops_dev_corr / hw.PEAK_FLOPS_BF16,
+        "t_memory": bytes_dev / hw.HBM_BW,
+        "t_collective": coll_bytes.get("total", 0.0) / hw.ICI_BW,
+        "t_dcn": coll_bytes.get("dcn", 0.0) / hw.DCN_BW,
+        "useful_flops_ratio": mf / max(flops_dev_corr * nchips, 1.0),
+    }
+    dom = max(
+        ("t_compute", "t_memory", "t_collective"),
+        key=lambda k: rec["roofline"][k],
+    )
+    rec["roofline"]["dominant"] = dom
+
+    out = pathlib.Path(outdir)
+    out.mkdir(parents=True, exist_ok=True)
+    name = f"{arch}__{shape_name}__{mesh_name}{('__' + tag) if tag else ''}.json"
+    (out / name).write_text(json.dumps(rec, indent=1))
+
+    fits = rec["memory"]["peak_est_bytes"] <= hw.HBM_PER_CHIP
+    print(
+        f"[dryrun] {arch:>20s} {shape_name:>11s} {mesh_name:>6s} "
+        f"compile=({memrec['t_compile']:.0f}+{c1['t_compile']:.0f}"
+        f"+{c2['t_compile']:.0f})s flops/dev={flops_dev_corr:.3e} "
+        f"mem={rec['memory']['peak_est_bytes']/2**30:6.2f}GiB "
+        f"coll={coll_bytes.get('total',0)/2**20:9.2f}MiB "
+        f"dom={dom[2:]} fits={fits} "
+        f"useful={rec['roofline']['useful_flops_ratio']:.2f}",
+        flush=True,
+    )
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser(description="multi-pod dry-run")
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--tag", default="", help="artifact tag (hillclimb variants)")
+    ap.add_argument(
+        "--set", action="append", default=[],
+        help="ModelConfig override key=val (e.g. --set cast_params_once=true)",
+    )
+    args = ap.parse_args()
+
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        if v.lower() in ("true", "false"):
+            overrides[k] = v.lower() == "true"
+        else:
+            try:
+                overrides[k] = int(v)
+            except ValueError:
+                try:
+                    overrides[k] = float(v)
+                except ValueError:
+                    overrides[k] = v
+
+    cells = list(C.cells(include_skipped=True))
+    if args.list:
+        for a, s, skip in cells:
+            print(f"{a:>20s} {s:>11s} {'SKIP: ' + skip if skip else 'run'}")
+        return
+
+    todo = []
+    for a, s, skip in cells:
+        if args.arch and a != C.ALIASES.get(args.arch, args.arch):
+            continue
+        if args.shape and s != args.shape:
+            continue
+        if not args.all and not args.arch and not args.shape:
+            continue
+        todo.append((a, s, skip))
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    failures = []
+    for a, s, skip in todo:
+        if skip:
+            print(f"[dryrun] {a:>20s} {s:>11s}  SKIPPED: {skip}", flush=True)
+            rec = {"arch": a, "shape": s, "skipped": skip}
+            out = pathlib.Path(args.out)
+            out.mkdir(parents=True, exist_ok=True)
+            (out / f"{a}__{s}__skip.json").write_text(json.dumps(rec))
+            continue
+        for m in meshes:
+            try:
+                run_cell(a, s, m, args.out, overrides=overrides, tag=args.tag)
+            except Exception as e:  # noqa: BLE001
+                failures.append((a, s, m, repr(e)))
+                print(f"[dryrun] FAIL {a} {s} {m}: {e}", flush=True)
+                traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{len(failures)} dry-run cells failed: {failures}")
+    print("[dryrun] all requested cells compiled OK", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,99 @@
+"""Parse compiled (SPMD-partitioned) HLO text for collective traffic.
+
+``collective_bytes`` sums, per collective family, the PER-DEVICE payload bytes
+of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute op (shapes in partitioned HLO are already per-device).
+Cross-pod (DCN) collectives are classified by replica groups that span device
+ids from different pods.
+
+Byte accounting per op (ring-algorithm convention, factors of (n-1)/n ~ 1):
+  all-gather         -> output bytes        (each device receives out - in)
+  reduce-scatter     -> input bytes
+  all-reduce         -> 2 x input bytes     (reduce-scatter + all-gather)
+  all-to-all         -> input bytes
+  collective-permute -> input bytes
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*((?:\([^)]*\)|\S+))\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(([^)]*)\)(.*)$"
+)
+_GROUPS_RE = re.compile(r"replica_groups=\{(\{[^}]*\}(?:,\{[^}]*\})*)\}")
+_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=\[([\d,]+)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def _crosses_pods(line: str, pod_size: int) -> bool:
+    m = _GROUPS_RE.search(line)
+    if m:
+        for grp in re.findall(r"\{([^}]*)\}", m.group(1)):
+            ids = [int(x) for x in grp.split(",") if x.strip()]
+            if ids and (max(ids) // pod_size) != (min(ids) // pod_size):
+                return True
+        return False
+    m = _IOTA_RE.search(line)
+    if m:
+        # iota groups [G,S]<=[dims...]: conservative -- if any group's stride
+        # pattern spans >= pod_size ids, flag as cross-pod
+        g, s = int(m.group(1)), int(m.group(2))
+        return s * g > pod_size and s > 1 and (g * s // g) > pod_size
+    return False
+
+
+def collective_stats(hlo_text: str, *, pod_size: int = 1 << 30) -> dict:
+    """Returns {op_kind: bytes, ...}, plus 'total', 'dcn' (cross-pod bytes),
+    and 'count' per kind."""
+    out = defaultdict(float)
+    counts = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        out_shape, kind, operands, rest = m.groups()
+        if f"{kind}-done" in line:
+            continue
+        if kind == "all-gather":
+            size = _shape_bytes(out_shape)
+        else:
+            size = _shape_bytes(operands)
+        if kind == "all-reduce":
+            size *= 2
+        out[kind] += size
+        counts[kind] += 1
+        if _crosses_pods(line, pod_size):
+            out["dcn"] += size
+    out["total"] = sum(v for k, v in out.items() if k != "dcn")
+    return {"bytes": dict(out), "counts": dict(counts)}
+
+
+def duplicate_fusion_ratio(hlo_text: str) -> float:
+    """Crude remat/redundancy indicator: fraction of dot ops appearing in
+    more than one fusion with identical shapes."""
+    dots = re.findall(r"dot\(([^)]*)\)", hlo_text)
+    if not dots:
+        return 0.0
+    uniq = len(set(dots))
+    return 1.0 - uniq / len(dots)

@@ -1,0 +1,10 @@
+"""Target-hardware constants for the roofline (TPU v5e-class chip, per the
+assignment): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI. DCN (cross-pod)
+bandwidth is an assumption (100 Gbps-class NIC per 4 chips ~ 3.1 GB/s/chip),
+stated here so the multi-pod collective term is reproducible."""
+
+PEAK_FLOPS_BF16 = 197e12     # per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link (formula uses chips x link_bw)
+DCN_BW = 3.1e9               # bytes/s per chip across pods (assumption)
+HBM_PER_CHIP = 16 * 2**30    # v5e: 16 GiB

@@ -1,0 +1,24 @@
+"""Production meshes. Defined as FUNCTIONS so importing this module never
+touches jax device state (device count is locked on first jax init)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; multi-pod adds the cross-DCN 'pod' axis
+    (2 pods = 512 chips). Axes: data = DP/FSDP, model = TP/EP."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh over however many host devices exist (tests/benchmarks)."""
+    return jax.make_mesh(
+        (data, model),
+        ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+    )

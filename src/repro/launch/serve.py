@@ -1,0 +1,63 @@
+"""Batched serving driver: prefill a batch of prompts, decode greedily.
+
+Example:
+  PYTHONPATH=src python -m repro.launch.serve --arch mamba2_370m \
+      --preset smoke --prompts 4 --prompt-len 16 --gen 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import config as C
+from repro.models import zoo
+from repro.train.steps import make_decode_step
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mamba2_370m")
+    ap.add_argument("--preset", default="smoke", choices=["smoke", "full"])
+    ap.add_argument("--prompts", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = (C.get_smoke_config(args.arch) if args.preset == "smoke"
+           else C.get_config(args.arch))
+    api = zoo.build(cfg)
+    params = api.init_params(jax.random.key(args.seed))
+
+    batch = zoo.make_demo_batch(
+        cfg, jax.random.key(args.seed + 1), args.prompts, args.prompt_len
+    )
+    max_len = args.prompt_len + args.gen + 1
+    t0 = time.time()
+    logits, caches = jax.jit(
+        lambda p, b: api.prefill(p, b, max_len)
+    )(params, batch)
+    tok = jnp.argmax(logits[:, :, : cfg.vocab_size], axis=-1).astype(jnp.int32)
+    print(f"[serve] prefill: {time.time()-t0:.2f}s")
+
+    # NOTE: prefill caches were built at prompt length; decode appends.
+    decode = jax.jit(make_decode_step(api))
+    outs = [tok]
+    t0 = time.time()
+    for _ in range(args.gen):
+        tok, caches = decode(params, caches, tok)
+        outs.append(tok)
+    gen = np.concatenate([np.asarray(t) for t in outs], axis=1)
+    dt = time.time() - t0
+    print(f"[serve] decoded {args.gen} tokens x {args.prompts} seqs "
+          f"in {dt:.2f}s ({args.gen*args.prompts/dt:.1f} tok/s)")
+    print("[serve] first sequence:", gen[0].tolist())
+    return gen
+
+
+if __name__ == "__main__":
+    main()

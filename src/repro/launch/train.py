@@ -1,0 +1,141 @@
+"""Online model management driver (the paper's loop, lifted to LMs):
+
+  stream -> R-TBS reservoir update -> (drift-triggered | periodic) retraining
+  on the current time-biased sample -> prequential evaluation -> checkpoint.
+
+Runs any `--arch` (reduced `--preset smoke` configs on CPU; full configs are
+for real pods). Fault tolerance: `--resume` restarts bit-exactly from the
+newest checkpoint (params, optimizer, reservoir, stream position).
+
+Example:
+  PYTHONPATH=src python -m repro.launch.train --arch stablelm_12b \
+      --preset smoke --ticks 30 --retrain-every 5
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import config as C
+from repro.checkpoint import AsyncCheckpointer, latest_step, restore_checkpoint
+from repro.core import latent as lt
+from repro.core import rtbs
+from repro.data.streams import TokenDriftStream, mode_schedule
+from repro.models import zoo
+from repro.optim import AdamWConfig, adamw_init
+from repro.train.steps import make_train_step
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="stablelm_12b")
+    ap.add_argument("--preset", default="smoke", choices=["smoke", "full"])
+    ap.add_argument("--ticks", type=int, default=30)
+    ap.add_argument("--batch-per-tick", type=int, default=32)
+    ap.add_argument("--reservoir", type=int, default=256)
+    ap.add_argument("--lam", type=float, default=0.07)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--retrain-every", type=int, default=5)
+    ap.add_argument("--retrain-steps", type=int, default=8)
+    ap.add_argument("--train-batch", type=int, default=16)
+    ap.add_argument("--drift", default="periodic", choices=["periodic", "single", "none"])
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=10)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    args = ap.parse_args(argv)
+
+    cfg = (C.get_smoke_config(args.arch) if args.preset == "smoke"
+           else C.get_config(args.arch))
+    api = zoo.build(cfg)
+    stream = TokenDriftStream(seed=args.seed, vocab=cfg.vocab_size,
+                              seq_len=args.seq_len)
+
+    params = api.init_params(jax.random.key(args.seed))
+    opt_state = adamw_init(params)
+    # fixed schedule horizon: must NOT depend on --ticks, or an interrupted
+    # run would train under a different LR curve than the run it resumes
+    train_step = jax.jit(
+        make_train_step(
+            api, AdamWConfig(lr=args.lr), microbatches=1,
+            warmup=2, total_steps=4000,
+        )
+    )
+    loss_fn = jax.jit(api.loss)
+
+    # reservoir of token sequences
+    proto = jax.ShapeDtypeStruct((args.seq_len,), jnp.int32)
+    st = rtbs.init(proto, args.reservoir)
+    start_tick = 0
+
+    ckpt = AsyncCheckpointer(args.ckpt_dir) if args.ckpt_dir else None
+    if args.resume and args.ckpt_dir:
+        last = latest_step(args.ckpt_dir)
+        if last is not None:
+            tree = restore_checkpoint(
+                args.ckpt_dir, last, (params, opt_state, st, 0)
+            )
+            params, opt_state, st, start_tick = tree
+            params = jax.tree_util.tree_map(jnp.asarray, params)
+            opt_state = jax.tree_util.tree_map(jnp.asarray, opt_state)
+            st = jax.tree_util.tree_map(jnp.asarray, st)
+            start_tick = int(start_tick)
+            print(f"[train] resumed from step {last} (tick {start_tick})")
+
+    log = []
+    for t in range(start_tick, args.ticks):
+        mode = 0 if args.drift == "none" else mode_schedule(args.drift, t)
+        batch_np = stream.batch(t, args.batch_per_tick, mode)
+        batch = jnp.asarray(batch_np)
+
+        # prequential eval BEFORE the model sees this data
+        eval_loss = float(loss_fn(params, {"tokens": batch}))
+
+        # reservoir update (the paper's technique)
+        key_t = jax.random.fold_in(jax.random.key(args.seed + 1), t)
+        st = rtbs.step(key_t, st, batch, jnp.int32(args.batch_per_tick),
+                       n=args.reservoir, lam=args.lam)
+
+        # periodic retraining on the realized time-biased sample
+        train_loss = float("nan")
+        if (t + 1) % args.retrain_every == 0:
+            mask, size = rtbs.realize(
+                jax.random.fold_in(jax.random.key(args.seed + 2), t), st
+            )
+            items = st.lat.items
+            size_i = int(size)
+            if size_i >= args.train_batch:
+                idx_pool = np.where(np.asarray(mask))[0]
+                rs = np.random.RandomState(t)
+                for it in range(args.retrain_steps):
+                    sel = rs.choice(idx_pool, size=args.train_batch, replace=True)
+                    mb = jnp.asarray(np.asarray(items)[sel])
+                    params, opt_state, metrics = train_step(
+                        params, opt_state, {"tokens": mb}
+                    )
+                train_loss = float(metrics["loss"])
+
+        log.append({"tick": t, "mode": mode, "eval_loss": eval_loss,
+                    "train_loss": train_loss,
+                    "sample_weight": float(st.lat.weight),
+                    "total_weight": float(st.total_weight)})
+        print(f"[train] tick={t:4d} mode={mode} eval={eval_loss:7.4f} "
+              f"train={train_loss:7.4f} C={float(st.lat.weight):8.2f}",
+              flush=True)
+
+        if ckpt and (t + 1) % args.ckpt_every == 0:
+            ckpt.save(t + 1, (params, opt_state, st, t + 1))
+    if ckpt:
+        ckpt.wait()
+    return log
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""repro.models -- pure-JAX model zoo (pytree params, lax.scan over layers).
+
+Families: dense/GQA/MQA/SWA transformer, MoE, Mamba2 SSD, Zamba2-style hybrid,
+Whisper-style encoder-decoder, Qwen2-VL backbone (M-RoPE + frontend stub).
+Entry point: :func:`repro.models.zoo.build`.
+"""
+from . import zoo  # noqa: F401

@@ -1,0 +1,181 @@
+"""Whisper-style encoder-decoder (audio): bidirectional encoder over stubbed
+frame embeddings + causal decoder with cross-attention. Sinusoidal absolute
+positions (DESIGN.md notes the deviation from learned decoder positions)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as A
+from . import layers as L
+from . import transformer as T
+
+
+def init_params(cfg, key):
+    ke, kenc, kdec, ko = jax.random.split(key, 4)
+    pd = L.param_dtype(cfg)
+
+    def enc_block(k):
+        k1, k2 = jax.random.split(k)
+        return {
+            "ln1": L.norm_params(cfg, cfg.d_model),
+            "attn": A.attn_params(cfg, k1),
+            "ln2": L.norm_params(cfg, cfg.d_model),
+            "mlp": L.mlp_params(cfg, k2, cfg.d_model, cfg.d_ff),
+        }
+
+    def dec_block(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        return {
+            "ln1": L.norm_params(cfg, cfg.d_model),
+            "self_attn": A.attn_params(cfg, k1),
+            "ln_x": L.norm_params(cfg, cfg.d_model),
+            "cross_attn": A.attn_params(cfg, k2),
+            "ln2": L.norm_params(cfg, cfg.d_model),
+            "mlp": L.mlp_params(cfg, k3, cfg.d_model, cfg.d_ff),
+        }
+
+    return {
+        "embed": L.embed_init(ke, (cfg.padded_vocab, cfg.d_model), pd),
+        "enc": jax.vmap(enc_block)(jax.random.split(kenc, cfg.encoder_layers)),
+        "enc_norm": L.norm_params(cfg, cfg.d_model),
+        "dec": jax.vmap(dec_block)(jax.random.split(kdec, cfg.num_layers)),
+        "final_norm": L.norm_params(cfg, cfg.d_model),
+    }
+
+
+def encode(cfg, params, frame_embeds):
+    """frame_embeds: [B, T_enc, D] (stubbed conv frontend output)."""
+    dt = L.compute_dtype(cfg)
+    x = frame_embeds.astype(dt)
+    x = x + L.sinusoidal_positions(x.shape[1], cfg.d_model).astype(dt)[None]
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+    def block(h, p):
+        hn = L.apply_norm(cfg, p["ln1"], h)
+        h = h + A.self_attention(cfg, p["attn"], hn, positions, causal=False)
+        h = h + L.apply_mlp(cfg, p["mlp"], L.apply_norm(cfg, p["ln2"], h))
+        return h, None
+
+    fn = jax.checkpoint(block) if cfg.remat else block
+    x, _ = T.scan_or_unroll(cfg, fn, x, params["enc"])
+    return L.apply_norm(cfg, params["enc_norm"], x)
+
+
+def _dec_block(cfg, p, h, positions, enc_kv):
+    hn = L.apply_norm(cfg, p["ln1"], h)
+    h = h + A.self_attention(cfg, p["self_attn"], hn, positions, causal=True)
+    hx = L.apply_norm(cfg, p["ln_x"], h)
+    h = h + A.cross_attention(cfg, p["cross_attn"], hx, enc_kv)
+    return h + L.apply_mlp(cfg, p["mlp"], L.apply_norm(cfg, p["ln2"], h))
+
+
+def forward(cfg, params, batch):
+    """Teacher-forced training: frame embeds -> encoder; tokens -> decoder."""
+    from . import zoo as _zoo
+    params = _zoo.precast(cfg, params)
+    dt = L.compute_dtype(cfg)
+    enc_out = encode(cfg, params, batch["frontend_embeds"])
+    tokens = batch["tokens"]
+    x = params["embed"].astype(dt)[tokens]
+    x = x + L.sinusoidal_positions(x.shape[1], cfg.d_model).astype(dt)[None]
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+    def block(h, p):
+        enc_kv = A.encode_cross_kv(cfg, p["cross_attn"], enc_out)
+        return _dec_block(cfg, p, h, positions, enc_kv), None
+
+    fn = jax.checkpoint(block) if cfg.remat else block
+    x, _ = T.scan_or_unroll(cfg, fn, x, params["dec"])
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    return T.logits_from_hidden(cfg, params, x)
+
+
+def prefill(cfg, params, batch, max_len):
+    """Encode the (stubbed) audio frames, teacher-force the prompt through the
+    decoder, return (last logits, {self-attn caches, cross K/V})."""
+    from . import zoo as _zoo
+    params = _zoo.precast(cfg, params)
+    dt = L.compute_dtype(cfg)
+    enc_out = encode(cfg, params, batch["frontend_embeds"])
+    tokens = batch["tokens"]
+    x = params["embed"].astype(dt)[tokens]
+    x = x + L.sinusoidal_positions(x.shape[1], cfg.d_model).astype(dt)[None]
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+    def block(h, p):
+        enc_kv = A.encode_cross_kv(cfg, p["cross_attn"], enc_out)
+        hn = L.apply_norm(cfg, p["ln1"], h)
+        y, kv_c = A.prefill_attention(cfg, p["self_attn"], hn, positions, max_len)
+        h = h + y
+        hx = L.apply_norm(cfg, p["ln_x"], h)
+        h = h + A.cross_attention(cfg, p["cross_attn"], hx, enc_kv)
+        h = h + L.apply_mlp(cfg, p["mlp"], L.apply_norm(cfg, p["ln2"], h))
+        return h, (kv_c, enc_kv)
+
+    x, (kv, cross) = T.scan_or_unroll(cfg, block, x, params["dec"])
+    x = L.apply_norm(cfg, params["final_norm"], x[:, -1:])
+    return T.logits_from_hidden(cfg, params, x), {"kv": kv, "cross": cross}
+
+
+def init_decode_state(cfg, batch, max_len, prefill_len=0, enc_out=None):
+    """Decoder self-attn caches + precomputed per-layer cross K/V."""
+    dt = L.compute_dtype(cfg)
+    kv = A.init_cache(cfg, batch, max_len, dt, prefill_len)
+    kv = T.stack_layer_tree(cfg, kv, cfg.num_layers)
+    KV = cfg.num_kv_heads * cfg.kv_replication
+    hd = cfg.resolved_head_dim
+    if cfg.scan_layers:
+        cross = (
+            jnp.zeros((cfg.num_layers, batch, cfg.encoder_seq, KV, hd), dt),
+            jnp.zeros((cfg.num_layers, batch, cfg.encoder_seq, KV, hd), dt),
+        )
+    else:
+        cross = [
+            (jnp.zeros((batch, cfg.encoder_seq, KV, hd), dt),
+             jnp.zeros((batch, cfg.encoder_seq, KV, hd), dt))
+            for _ in range(cfg.num_layers)
+        ]
+    return {"kv": kv, "cross": cross}
+
+
+def precompute_cross(cfg, params, enc_out):
+    def per_layer(p):
+        return A.encode_cross_kv(cfg, p["cross_attn"], enc_out)
+
+    return jax.vmap(per_layer, in_axes=(0,))(params["dec"])
+
+
+def decode_step(cfg, params, caches, tokens):
+    from . import zoo as _zoo
+    params = _zoo.precast(cfg, params)
+    dt = L.compute_dtype(cfg)
+    x = params["embed"].astype(dt)[tokens]
+    unstacked = isinstance(caches["kv"], list)
+    pos = caches["kv"][0].length if unstacked else caches["kv"].length[0]
+    x = x + L.sinusoidal_positions(1, cfg.d_model, offset=pos).astype(dt)[None]
+
+    def block(h, inp):
+        p, kv_c, cross_k, cross_v = inp
+        hn = L.apply_norm(cfg, p["ln1"], h)
+        y, kv_c = A.decode_attention(cfg, p["self_attn"], hn, kv_c)
+        h = h + y
+        hx = L.apply_norm(cfg, p["ln_x"], h)
+        h = h + A.cross_attention(cfg, p["cross_attn"], hx, (cross_k, cross_v))
+        h = h + L.apply_mlp(cfg, p["mlp"], L.apply_norm(cfg, p["ln2"], h))
+        return h, kv_c
+
+    if unstacked:
+        kv = []
+        for i, (kv_c, (ck_i, cv_i)) in enumerate(zip(caches["kv"], caches["cross"])):
+            p_i = jax.tree_util.tree_map(lambda a: a[i], params["dec"])
+            x, kv_c = block(x, (p_i, kv_c, ck_i, cv_i))
+            kv.append(kv_c)
+    else:
+        ck, cv = caches["cross"]
+        x, kv = jax.lax.scan(block, x, (params["dec"], caches["kv"], ck, cv))
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    return T.logits_from_hidden(cfg, params, x), {"kv": kv, "cross": caches["cross"]}

@@ -1,0 +1,171 @@
+"""Zamba2-style hybrid LM: Mamba2 backbone + ONE shared attention+MLP block
+invoked every ``attn_every`` layers (weights shared across invocations, one KV
+cache per invocation). [arXiv:2411.15242]
+
+Structure: G groups, each = (attn_every Mamba2 layers) then the shared block.
+Outer scan over groups (carrying hidden + group index), inner scan over the
+group's Mamba2 layers. Deviation noted in DESIGN.md: the original concatenates
+initial embeddings into the shared block input and adds per-invocation LoRA;
+we apply the plain shared block."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as A
+from . import layers as L
+from . import ssm as S
+from . import transformer as T
+
+
+def _groups(cfg):
+    assert cfg.num_layers % cfg.attn_every == 0
+    return cfg.num_layers // cfg.attn_every
+
+
+def init_params(cfg, key):
+    ke, km, ka, ko = jax.random.split(key, 4)
+    pd = L.param_dtype(cfg)
+    params = {
+        "embed": L.embed_init(ke, (cfg.padded_vocab, cfg.d_model), pd),
+        "mamba": jax.vmap(
+            lambda k: {"ln": L.norm_params(cfg, cfg.d_model),
+                       "ssm": S.ssm_params(cfg, k)}
+        )(jax.random.split(km, cfg.num_layers)),
+        "shared": T.init_block_params(cfg, ka),
+        "final_norm": L.norm_params(cfg, cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = L.dense_init(
+            ko, (cfg.d_model, cfg.padded_vocab), pd, fan_in=cfg.d_model
+        )
+    return params
+
+
+def _regroup(cfg, tree):
+    """[L, ...] stacked leaves -> [G, attn_every, ...]."""
+    G = _groups(cfg)
+    return jax.tree_util.tree_map(
+        lambda a: a.reshape((G, cfg.attn_every) + a.shape[1:]), tree
+    )
+
+
+def forward(cfg, params, batch):
+    from . import zoo as _zoo
+    params = _zoo.precast(cfg, params)
+    x, positions = T._embed_inputs(cfg, params, batch)
+    grouped = _regroup(cfg, params["mamba"])
+
+    def mamba_layer(h, p):
+        y, _ = S.apply_ssm(cfg, p["ssm"], L.apply_norm(cfg, p["ln"], h))
+        return h + y, None
+
+    def group(h, pg):
+        fn = jax.checkpoint(mamba_layer) if cfg.remat else mamba_layer
+        h, _ = T.scan_or_unroll(cfg, fn, h, pg)
+        h = T._block_fwd(cfg, params["shared"], h, positions)
+        return h, None
+
+    # remat the whole group too: the shared attention block's intermediates
+    # must not be stashed once per invocation
+    gfn = jax.checkpoint(group) if cfg.remat else group
+    x, _ = T.scan_or_unroll(cfg, gfn, x, grouped)
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    return T.logits_from_hidden(cfg, params, x)
+
+
+def prefill(cfg, params, batch, max_len):
+    """Prompt pass producing per-layer SSM caches + per-invocation KV caches."""
+    from . import zoo as _zoo
+    params = _zoo.precast(cfg, params)
+    x, positions = T._embed_inputs(cfg, params, batch)
+    grouped = _regroup(cfg, params["mamba"])
+
+    def mamba_layer(h, p):
+        y, cache = S.apply_ssm(cfg, p["ssm"], L.apply_norm(cfg, p["ln"], h))
+        return h + y, cache
+
+    def group(h, pg):
+        h, ssm_c = T.scan_or_unroll(cfg, mamba_layer, h, pg)
+        hn = L.apply_norm(cfg, params["shared"]["ln1"], h)
+        y, kv_c = A.prefill_attention(cfg, params["shared"]["attn"], hn, positions, max_len)
+        h = h + y
+        h = h + T._ffn(cfg, params["shared"],
+                       L.apply_norm(cfg, params["shared"]["ln2"], h))
+        return h, (ssm_c, kv_c)
+
+    x, (ssm_c, kv_c) = T.scan_or_unroll(cfg, group, x, grouped)
+    x = L.apply_norm(cfg, params["final_norm"], x[:, -1:])
+    return T.logits_from_hidden(cfg, params, x), {"ssm": ssm_c, "kv": kv_c}
+
+
+# ---------------------------------------------------------------------------
+# serving: per-layer SSM caches + per-invocation KV caches for the shared block
+# ---------------------------------------------------------------------------
+def init_decode_state(cfg, batch, max_len, prefill_len=0):
+    dt = L.compute_dtype(cfg)
+    G = _groups(cfg)
+    ssm = S.init_ssm_cache(cfg, batch, dt)
+    kv = A.init_cache(cfg, batch, max_len, dt, prefill_len)
+    if cfg.scan_layers:
+        ssm = jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(
+                a[None, None], (G, cfg.attn_every) + a.shape
+            ),
+            ssm,
+        )
+        kv = jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a[None], (G,) + a.shape)
+            if getattr(a, "ndim", 0)
+            else jnp.full((G,), a),
+            kv,
+        )
+        return {"ssm": ssm, "kv": kv}
+    copy = lambda t: jax.tree_util.tree_map(jnp.array, t)
+    return {
+        "ssm": [[copy(ssm) for _ in range(cfg.attn_every)] for _ in range(G)],
+        "kv": [copy(kv) for _ in range(G)],
+    }
+
+
+def decode_step(cfg, params, caches, tokens):
+    from . import zoo as _zoo
+    params = _zoo.precast(cfg, params)
+    dt = L.compute_dtype(cfg)
+    x = params["embed"].astype(dt)[tokens]
+    grouped = _regroup(cfg, params["mamba"])
+
+    def mamba_layer(h, inp):
+        p, cache = inp
+        hn = L.apply_norm(cfg, p["ln"], h)
+        y, cache = S.decode_ssm(cfg, p["ssm"], hn, cache)
+        return h + y, cache
+
+    def group(h, inp):
+        pg, ssm_c, kv_c = inp
+        if isinstance(ssm_c, list):
+            h, ssm_c = T.unrolled_decode(mamba_layer, h, pg, ssm_c)
+        else:
+            h, ssm_c = jax.lax.scan(mamba_layer, h, (pg, ssm_c))
+        hn = L.apply_norm(cfg, params["shared"]["ln1"], h)
+        y, kv_c = A.decode_attention(cfg, params["shared"]["attn"], hn, kv_c)
+        h = h + y
+        h = h + T._ffn(cfg, params["shared"],
+                       L.apply_norm(cfg, params["shared"]["ln2"], h))
+        return h, (ssm_c, kv_c)
+
+    if isinstance(caches["kv"], list):
+        x = x
+        ssm_out, kv_out = [], []
+        for g, kv_c in enumerate(caches["kv"]):
+            pg = jax.tree_util.tree_map(lambda a: a[g], grouped)
+            x, (ssm_c, kv_c) = group(x, (pg, caches["ssm"][g], kv_c))
+            ssm_out.append(ssm_c)
+            kv_out.append(kv_c)
+        x = L.apply_norm(cfg, params["final_norm"], x)
+        return T.logits_from_hidden(cfg, params, x), {"ssm": ssm_out, "kv": kv_out}
+    x, (ssm_c, kv_c) = jax.lax.scan(
+        group, x, (grouped, caches["ssm"], caches["kv"])
+    )
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    return T.logits_from_hidden(cfg, params, x), {"ssm": ssm_c, "kv": kv_c}

@@ -1,0 +1,144 @@
+"""Shared layers: norms, embeddings, rotary (RoPE + M-RoPE), MLPs, init."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def compute_dtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def param_dtype(cfg):
+    return jnp.dtype(cfg.param_dtype)
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+def dense_init(key, shape, dtype, fan_in=None):
+    fan_in = fan_in if fan_in is not None else shape[0]
+    std = 1.0 / np.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, shape) * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype):
+    return (jax.random.normal(key, shape) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+def rms_norm(x, scale, eps):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def layer_norm(x, scale, bias, eps):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    out = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def norm_params(cfg, d):
+    if cfg.act == "gelu":  # LayerNorm families (whisper)
+        return {"scale": jnp.ones((d,), param_dtype(cfg)),
+                "bias": jnp.zeros((d,), param_dtype(cfg))}
+    return {"scale": jnp.zeros((d,), param_dtype(cfg))}  # RMSNorm (scale-centered)
+
+
+def apply_norm(cfg, p, x):
+    if "bias" in p:
+        return layer_norm(x, p["scale"], p["bias"], cfg.norm_eps)
+    return rms_norm(x, p["scale"], cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# positions: RoPE, M-RoPE (qwen2-vl), sinusoidal absolute (whisper)
+# ---------------------------------------------------------------------------
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x, positions, theta, mrope_sections=()):
+    """x: [B, S, H, hd]; positions: [B, S] (broadcast to 3 streams for M-RoPE)
+    or [3, B, S] for genuine multimodal t/h/w positions."""
+    B, S, H, hd = x.shape
+    half = hd // 2
+    freqs = rope_frequencies(hd, theta)                       # [half]
+    if positions.ndim == 2:
+        positions = jnp.broadcast_to(positions[None], (3,) + positions.shape)
+    if mrope_sections:
+        # M-RoPE: frequency bands are split into (t, h, w) sections, each driven
+        # by its own position stream (arXiv:2409.12191).
+        sec = np.asarray(mrope_sections)
+        assert sec.sum() == half, (mrope_sections, half)
+        stream_of_band = np.repeat(np.arange(len(sec)), sec)  # [half] in {0,1,2}
+        pos = positions[jnp.asarray(stream_of_band)]          # [half, B, S]
+        ang = jnp.einsum("fbs,f->bsf", pos.astype(jnp.float32), freqs)
+    else:
+        ang = positions[0].astype(jnp.float32)[..., None] * freqs[None, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]                         # [B,S,1,half]
+    cos = jnp.cos(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    dt = x.dtype
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate(
+        [x1f * cos - x2f * sin, x2f * cos + x1f * sin], axis=-1
+    )
+    return out.astype(dt)
+
+
+def sinusoidal_positions(seq_len, d_model, offset=0):
+    pos = jnp.arange(seq_len, dtype=jnp.float32) + offset
+    half = d_model // 2
+    inv = 1.0 / (10000.0 ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = pos[:, None] * inv[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+def mlp_params(cfg, key, d, f):
+    ks = jax.random.split(key, 3)
+    pd = param_dtype(cfg)
+    if cfg.act == "swiglu":
+        return {
+            "wg": dense_init(ks[0], (d, f), pd),
+            "wi": dense_init(ks[1], (d, f), pd),
+            "wo": dense_init(ks[2], (f, d), pd, fan_in=f),
+        }
+    p = {
+        "wi": dense_init(ks[0], (d, f), pd),
+        "wo": dense_init(ks[1], (f, d), pd, fan_in=f),
+    }
+    if cfg.use_bias:
+        p["bi"] = jnp.zeros((f,), pd)
+        p["bo"] = jnp.zeros((d,), pd)
+    return p
+
+
+def apply_mlp(cfg, p, x):
+    dt = x.dtype
+    if "wg" in p:
+        g = jnp.einsum("...d,df->...f", x, p["wg"].astype(dt))
+        h = jnp.einsum("...d,df->...f", x, p["wi"].astype(dt))
+        h = jax.nn.silu(g) * h
+    else:
+        h = jnp.einsum("...d,df->...f", x, p["wi"].astype(dt))
+        if "bi" in p:
+            h = h + p["bi"].astype(dt)
+        h = jax.nn.gelu(h)
+    out = jnp.einsum("...f,fd->...d", h, p["wo"].astype(dt))
+    if "bo" in p:
+        out = out + p["bo"].astype(dt)
+    return out

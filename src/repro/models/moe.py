@@ -1,0 +1,87 @@
+"""Mixture-of-Experts layer: top-k routing with capacity-bounded sort-based
+dispatch (fixed shapes, honest active-expert FLOPs for the roofline).
+
+Dispatch is the standard TPU-friendly scheme: flatten tokens, sort assignments
+by expert id, compute position-in-expert by a segment cumsum, scatter into a
+[E, C, D] buffer (drop beyond capacity), run per-expert einsums, scatter-add
+back weighted by the router gate. Experts' ff dims are tensor-sharded (none of
+the assigned expert counts divide the 16-way model axis; DESIGN.md §5)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+
+
+def moe_params(cfg, key):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    ks = jax.random.split(key, 4)
+    pd = L.param_dtype(cfg)
+    return {
+        "router": L.dense_init(ks[0], (d, e), pd),
+        "wg": L.dense_init(ks[1], (e, d, f), pd, fan_in=d),
+        "wi": L.dense_init(ks[2], (e, d, f), pd, fan_in=d),
+        "wo": L.dense_init(ks[3], (e, f, d), pd, fan_in=f),
+    }
+
+
+def capacity(cfg, n_tokens: int) -> int:
+    c = int(cfg.moe_capacity_factor * n_tokens * cfg.num_experts_per_tok
+            / cfg.num_experts)
+    return max(8, ((c + 7) // 8) * 8)
+
+
+def apply_moe(cfg, p, x):
+    """x: [B, S, D] -> [B, S, D]. Dispatch runs independently per group
+    (groups partition the flattened token axis and align with DP shards, so
+    the [E, C, D] buffers stay batch-sharded under SPMD)."""
+    B, S, D = x.shape
+    G = max(1, min(cfg.moe_groups, B))
+    xf = x.reshape(G, (B * S) // G, D)
+    out = jax.vmap(lambda xg: _moe_group(cfg, p, xg))(xf)
+    return out.reshape(B, S, D)
+
+
+def _moe_group(cfg, p, xf):
+    """xf: [N, D] -> [N, D]."""
+    N, D = xf.shape
+    E, K = cfg.num_experts, cfg.num_experts_per_tok
+    C = capacity(cfg, N)
+    dt = xf.dtype
+
+    logits = jnp.einsum("nd,de->ne", xf, p["router"].astype(dt)).astype(jnp.float32)
+    gate_all = jax.nn.softmax(logits, axis=-1)
+    gates, eidx = jax.lax.top_k(gate_all, K)          # [N, K]
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    # ---- sort-based position-in-expert ------------------------------------
+    flat_e = eidx.reshape(-1)                          # [N*K]
+    flat_tok = jnp.repeat(jnp.arange(N, dtype=jnp.int32), K)
+    flat_gate = gates.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)
+    se = flat_e[order]
+    # position within its expert group = index - start_of_group
+    idx = jnp.arange(N * K, dtype=jnp.int32)
+    seg_start = jnp.full((E,), N * K, jnp.int32).at[se].min(idx, mode="drop")
+    pos_in_e = idx - seg_start[se]
+    keep = pos_in_e < C                                # capacity drop
+    dest = jnp.where(keep, se * C + pos_in_e, E * C)   # E*C => dropped
+
+    # ---- dispatch -----------------------------------------------------------
+    xe = jnp.zeros((E * C, D), dt).at[dest].set(xf[flat_tok[order]], mode="drop")
+    xe = xe.reshape(E, C, D)
+
+    # ---- expert compute -------------------------------------------------------
+    if cfg.act == "swiglu":
+        g = jnp.einsum("ecd,edf->ecf", xe, p["wg"].astype(dt))
+        h = jnp.einsum("ecd,edf->ecf", xe, p["wi"].astype(dt))
+        h = jax.nn.silu(g) * h
+    else:
+        h = jax.nn.gelu(jnp.einsum("ecd,edf->ecf", xe, p["wi"].astype(dt)))
+    ye = jnp.einsum("ecf,efd->ecd", h, p["wo"].astype(dt)).reshape(E * C, D)
+
+    # ---- combine ---------------------------------------------------------------
+    src = jnp.where(keep, dest, 0)
+    contrib = ye[src] * jnp.where(keep, flat_gate[order], 0.0)[:, None].astype(dt)
+    return jnp.zeros((N, D), dt).at[flat_tok[order]].add(contrib)

@@ -1,0 +1,75 @@
+"""The paper's application models (Sec. 6.2-6.4), in JAX: kNN classification,
+linear regression, multinomial Naive Bayes. Each is (re)trained on the current
+realized sample -- fixed-capacity arrays + validity mask, so retraining and
+prediction are jit-able."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("k", "num_classes"))
+def knn_predict(train_x, train_y, valid, query_x, *, k: int = 7,
+                num_classes: int = 100):
+    """Majority vote over the k nearest (Euclidean) valid training points."""
+    d2 = jnp.sum(
+        (query_x[:, None, :] - train_x[None, :, :]) ** 2, axis=-1
+    )
+    d2 = jnp.where(valid[None, :], d2, jnp.inf)
+    _, idx = jax.lax.top_k(-d2, k)                       # [Q, k]
+    votes = train_y[idx]                                 # [Q, k]
+    # guard: neighbours that are invalid (tiny samples) vote for class -1
+    ok = jnp.take_along_axis(jnp.broadcast_to(valid[None], d2.shape), idx, 1)
+    onehot = jax.nn.one_hot(votes, num_classes) * ok[..., None]
+    return jnp.argmax(onehot.sum(axis=1), axis=-1).astype(jnp.int32)
+
+
+@jax.jit
+def linreg_fit(train_x, train_y, valid):
+    """Least squares (with intercept) over the valid rows (closed form)."""
+    w = valid.astype(jnp.float32)
+    X = jnp.concatenate([train_x, jnp.ones_like(train_x[:, :1])], axis=1)
+    Xw = X * w[:, None]
+    A = Xw.T @ X + 1e-6 * jnp.eye(X.shape[1])
+    b = Xw.T @ train_y
+    return jnp.linalg.solve(A, b)
+
+
+@jax.jit
+def linreg_predict(coef, query_x):
+    X = jnp.concatenate([query_x, jnp.ones_like(query_x[:, :1])], axis=1)
+    return X @ coef
+
+
+@functools.partial(jax.jit, static_argnames=("num_classes",))
+def nb_fit(train_counts, train_y, valid, *, num_classes: int = 2):
+    """Multinomial Naive Bayes with Laplace smoothing over bag-of-words."""
+    w = valid.astype(jnp.float32)
+    onehot = jax.nn.one_hot(train_y, num_classes) * w[:, None]   # [N, C]
+    class_counts = onehot.sum(axis=0)                            # [C]
+    word_counts = onehot.T @ train_counts                        # [C, V]
+    log_prior = jnp.log(class_counts + 1.0) - jnp.log(
+        jnp.sum(class_counts) + num_classes
+    )
+    log_like = jnp.log(word_counts + 1.0) - jnp.log(
+        word_counts.sum(axis=1, keepdims=True) + train_counts.shape[1]
+    )
+    return log_prior, log_like
+
+
+@jax.jit
+def nb_predict(params, query_counts):
+    log_prior, log_like = params
+    scores = query_counts @ log_like.T + log_prior[None]
+    return jnp.argmax(scores, axis=-1).astype(jnp.int32)
+
+
+def expected_shortfall(values, frac: float) -> float:
+    """z% ES: mean of the worst z% of cases (paper Sec. 6.2, [27])."""
+    import numpy as np
+
+    v = np.sort(np.asarray(values))[::-1]  # worst (largest error) first
+    k = max(1, int(round(frac * len(v))))
+    return float(v[:k].mean())

@@ -1,0 +1,184 @@
+"""Unified decoder-only transformer LM: dense / GQA / MQA / SWA / MoE / M-RoPE
+(covers qwen2-vl, granite-moe, mixtral, granite-20b, command-r, stablelm,
+mistral-large). Layers are stacked on a leading axis and driven by lax.scan
+(compact HLO, O(1) compile in depth); each block is optionally remat'd."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as A
+from . import layers as L
+from . import moe as M
+
+
+def init_block_params(cfg, key):
+    k1, k2 = jax.random.split(key)
+    p = {
+        "ln1": L.norm_params(cfg, cfg.d_model),
+        "attn": A.attn_params(cfg, k1),
+        "ln2": L.norm_params(cfg, cfg.d_model),
+    }
+    if cfg.num_experts:
+        p["moe"] = M.moe_params(cfg, k2)
+    else:
+        p["mlp"] = L.mlp_params(cfg, k2, cfg.d_model, cfg.d_ff)
+    return p
+
+
+def init_params(cfg, key):
+    ke, kl, ko = jax.random.split(key, 3)
+    pd = L.param_dtype(cfg)
+    params = {
+        "embed": L.embed_init(ke, (cfg.padded_vocab, cfg.d_model), pd),
+        "blocks": jax.vmap(lambda k: init_block_params(cfg, k))(
+            jax.random.split(kl, cfg.num_layers)
+        ),
+        "final_norm": L.norm_params(cfg, cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = L.dense_init(
+            ko, (cfg.d_model, cfg.padded_vocab), pd, fan_in=cfg.d_model
+        )
+    return params
+
+
+def _ffn(cfg, p, h):
+    if cfg.num_experts:
+        return M.apply_moe(cfg, p["moe"], h)
+    return L.apply_mlp(cfg, p["mlp"], h)
+
+
+def _block_fwd(cfg, p, x, positions):
+    h = x + A.self_attention(cfg, p["attn"], L.apply_norm(cfg, p["ln1"], x), positions)
+    return h + _ffn(cfg, p, L.apply_norm(cfg, p["ln2"], h))
+
+
+def _embed_inputs(cfg, params, batch):
+    """Token embeddings, with optional stubbed frontend embeddings PREPENDED
+    (qwen2-vl patch embeds). Returns (x [B,S,D], positions [B,S])."""
+    dt = L.compute_dtype(cfg)
+    tokens = batch["tokens"]
+    x = params["embed"].astype(dt)[tokens]
+    if batch.get("frontend_embeds") is not None:
+        fe = batch["frontend_embeds"].astype(dt)
+        x = jnp.concatenate([fe, x], axis=1)
+    B, S, _ = x.shape
+    positions = batch.get("positions")
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    return x, positions
+
+
+def logits_from_hidden(cfg, params, h):
+    dt = h.dtype
+    if cfg.tie_embeddings:
+        return jnp.einsum("bsd,vd->bsv", h, params["embed"].astype(dt))
+    return jnp.einsum("bsd,dv->bsv", h, params["unembed"].astype(dt))
+
+
+def forward(cfg, params, batch):
+    """Training/eval forward over the full sequence -> logits [B,S,Vp]."""
+    from . import zoo as _zoo
+    params = _zoo.precast(cfg, params)
+    x, positions = _embed_inputs(cfg, params, batch)
+
+    def block(h, p):
+        return _block_fwd(cfg, p, h, positions), None
+
+    fn = jax.checkpoint(block) if cfg.remat else block
+    x, _ = scan_or_unroll(cfg, fn, x, params["blocks"])
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    return logits_from_hidden(cfg, params, x)
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+def stack_layer_tree(cfg, tree, n):
+    """Stacked [L, ...] leaves when scanning; a LIST of per-layer trees when
+    unrolled -- separate argument buffers let XLA alias donated cache inputs
+    to their dynamic-update-sliced outputs (zero-copy decode)."""
+    if cfg.scan_layers:
+        return jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a[None], (n,) + a.shape)
+            if getattr(a, "ndim", 0)
+            else jnp.full((n,), a),
+            tree,
+        )
+    return [jax.tree_util.tree_map(jnp.array, tree) for _ in range(n)]
+
+
+def unrolled_decode(body, x, params_stacked, caches_list):
+    """Python-loop decode over per-layer (param-slice, cache) pairs."""
+    outs = []
+    for i, cache in enumerate(caches_list):
+        p_i = jax.tree_util.tree_map(lambda a: a[i], params_stacked)
+        x, c = body(x, (p_i, cache))
+        outs.append(c)
+    return x, outs
+
+
+def init_decode_state(cfg, batch, max_len, prefill_len=0):
+    dt = L.compute_dtype(cfg)
+    cache = A.init_cache(cfg, batch, max_len, dt, prefill_len)
+    return stack_layer_tree(cfg, cache, cfg.num_layers)
+
+
+def scan_or_unroll(cfg, body, carry, xs):
+    """lax.scan when cfg.scan_layers (compact HLO) else a python loop
+    (exact per-layer cost in the dry-run HLO; DESIGN.md §7)."""
+    if cfg.scan_layers:
+        return jax.lax.scan(body, carry, xs)
+    n = jax.tree_util.tree_leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(n):
+        x_i = jax.tree_util.tree_map(lambda a: a[i], xs)
+        carry, y = body(carry, x_i)
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys = jax.tree_util.tree_map(lambda *a: jnp.stack(a), *ys)
+    else:
+        ys = None
+    return carry, ys
+
+
+def prefill(cfg, params, batch, max_len):
+    """Run the full prompt, returning (last-position logits, stacked caches)."""
+    from . import zoo as _zoo
+    params = _zoo.precast(cfg, params)
+    x, positions = _embed_inputs(cfg, params, batch)
+
+    def block(h, p):
+        hn = L.apply_norm(cfg, p["ln1"], h)
+        y, cache = A.prefill_attention(cfg, p["attn"], hn, positions, max_len)
+        h = h + y
+        h = h + _ffn(cfg, p, L.apply_norm(cfg, p["ln2"], h))
+        return h, cache
+
+    x, caches = scan_or_unroll(cfg, block, x, params["blocks"])
+    x = L.apply_norm(cfg, params["final_norm"], x[:, -1:])
+    return logits_from_hidden(cfg, params, x), caches
+
+
+def decode_step(cfg, params, caches, tokens):
+    """One-token decode: tokens [B, 1] -> (logits [B,1,Vp], new caches)."""
+    from . import zoo as _zoo
+    params = _zoo.precast(cfg, params)
+    dt = L.compute_dtype(cfg)
+    x = params["embed"].astype(dt)[tokens]
+
+    def block(h, inp):
+        p, cache = inp
+        hn = L.apply_norm(cfg, p["ln1"], h)
+        y, cache = A.decode_attention(cfg, p["attn"], hn, cache)
+        h = h + y
+        h = h + _ffn(cfg, p, L.apply_norm(cfg, p["ln2"], h))
+        return h, cache
+
+    if isinstance(caches, list):
+        x, caches = unrolled_decode(block, x, params["blocks"], caches)
+    else:
+        x, caches = jax.lax.scan(block, x, (params["blocks"], caches))
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    return logits_from_hidden(cfg, params, x), caches

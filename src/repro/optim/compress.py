@@ -1,0 +1,45 @@
+"""Error-feedback int8 gradient compression for the cross-pod (DCN) hop.
+
+Distributed-optimization trick (DESIGN.md Sec. 6): in the manual-DP mode the
+pod-axis gradient all-reduce is preceded by per-leaf int8 quantization with an
+error-feedback accumulator, cutting DCN bytes 4x (f32) / 2x (bf16) at no
+asymptotic accuracy cost (the quantization error is re-injected next step).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+def ef_init(grads_like: Any) -> Any:
+    return jax.tree_util.tree_map(
+        lambda g: jnp.zeros(g.shape, jnp.float32), grads_like
+    )
+
+
+def compress_grads(grads: Any, ef: Any):
+    """Quantize (grads + ef) to int8 with per-leaf scale; returns
+    ((q, scales), new_ef)."""
+
+    def one(g, e):
+        x = g.astype(jnp.float32) + e
+        scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+        q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+        new_e = x - q.astype(jnp.float32) * scale
+        return (q, scale), new_e
+
+    flat, tdef = jax.tree_util.tree_flatten(grads)
+    flat_e = jax.tree_util.tree_leaves(ef)
+    qs, es = zip(*[one(g, e) for g, e in zip(flat, flat_e)])
+    return (
+        jax.tree_util.tree_unflatten(tdef, [q for q, _ in qs]),
+        jax.tree_util.tree_unflatten(tdef, [s for _, s in qs]),
+    ), jax.tree_util.tree_unflatten(tdef, list(es))
+
+
+def decompress_grads(q_tree: Any, scale_tree: Any, dtype=jnp.float32) -> Any:
+    return jax.tree_util.tree_map(
+        lambda q, s: (q.astype(jnp.float32) * s).astype(dtype), q_tree, scale_tree
+    )

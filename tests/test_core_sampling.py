@@ -1,0 +1,472 @@
+"""Statistical validation of the core TBS algorithms against the paper's claims.
+
+Every test here checks an *analytic* property from the paper (inclusion
+probabilities, sample-size moments, uniformity), by Monte Carlo over vmapped
+trials, for BOTH the fixed-shape JAX implementations and (where cheap) the
+paper-literal Python references.
+"""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import latent as lt
+from repro.core import ref, rng, rtbs, simple
+
+PROTO = jax.ShapeDtypeStruct((), jnp.int32)
+
+
+def keys(seed, num):
+    return jax.random.split(jax.random.key(seed), num)
+
+
+# --------------------------------------------------------------------------
+# rng primitives
+# --------------------------------------------------------------------------
+class TestRng:
+    def test_hypergeometric_pmf(self):
+        k, a, b = 7, 10, 15
+        draws = jax.vmap(
+            lambda kk: rng.hypergeometric(kk, k, a, b, max_support=32)
+        )(keys(0, 40000))
+        draws = np.asarray(draws)
+        # analytic pmf
+        from math import comb
+
+        support = range(max(0, k - b), min(a, k) + 1)
+        pmf = {x: comb(a, x) * comb(b, k - x) / comb(a + b, k) for x in support}
+        for x, p in pmf.items():
+            emp = float(np.mean(draws == x))
+            assert abs(emp - p) < 0.012, (x, emp, p)
+        assert draws.min() >= max(0, k - b) and draws.max() <= min(a, k)
+
+    def test_hypergeometric_edges(self):
+        kk = jax.random.key(1)
+        assert int(rng.hypergeometric(kk, 0, 5, 5, max_support=16)) == 0
+        assert int(rng.hypergeometric(kk, 10, 10, 0, max_support=16)) == 10
+        assert int(rng.hypergeometric(kk, 5, 0, 9, max_support=16)) == 0
+
+    def test_multivariate_hypergeometric(self):
+        counts = jnp.array([3, 0, 7, 5], jnp.int32)
+        k = 9
+        draws = jax.vmap(
+            lambda kk: rng.multivariate_hypergeometric(kk, k, counts, max_support=16)
+        )(keys(2, 20000))
+        draws = np.asarray(draws)
+        assert (draws.sum(axis=1) == k).all()
+        assert (draws <= np.asarray(counts)).all()
+        mean = draws.mean(axis=0)
+        expect = k * np.asarray(counts) / float(counts.sum())
+        np.testing.assert_allclose(mean, expect, atol=0.05)
+
+    def test_stochastic_round(self):
+        x = 3.6
+        draws = jax.vmap(lambda kk: rng.stochastic_round(kk, x))(keys(3, 20000))
+        draws = np.asarray(draws)
+        assert set(np.unique(draws)) <= {3, 4}
+        assert abs(draws.mean() - x) < 0.02
+
+    def test_prefix_permutation(self):
+        cap, nvalid = 12, 7
+        perms = jax.vmap(lambda kk: rng.prefix_permutation(kk, cap, nvalid))(
+            keys(4, 8000)
+        )
+        perms = np.asarray(perms)
+        # first nvalid entries are a permutation of range(nvalid)
+        head = np.sort(perms[:, :nvalid], axis=1)
+        assert (head == np.arange(nvalid)).all()
+        # uniform marginal of the first element
+        for v in range(nvalid):
+            emp = float(np.mean(perms[:, 0] == v))
+            assert abs(emp - 1 / nvalid) < 0.02
+
+
+# --------------------------------------------------------------------------
+# downsampling (paper Algorithm 3 / Theorem 4.1)
+# --------------------------------------------------------------------------
+def _downsample_inclusion(c, cp, trials=30000, seed=0):
+    """Empirical Pr[id in S'] after downsample(c -> cp), for the JAX impl."""
+    cap = 10
+    k = math.floor(c)
+    ids = jnp.arange(cap, dtype=jnp.int32)  # slot i holds id i
+    base = lt.Latent(items=ids, nfull=jnp.int32(k), weight=jnp.float32(c))
+
+    def one(kk):
+        k1, k2 = jax.random.split(kk)
+        out = lt.downsample(k1, base, jnp.float32(cp))
+        mask, _ = lt.realize(k2, out)
+        member = jnp.zeros((cap,), jnp.float32)
+        member = member.at[out.items].add(mask.astype(jnp.float32))
+        return member
+
+    member = jax.vmap(one)(keys(seed, trials))
+    return np.asarray(member.mean(axis=0))
+
+
+@pytest.mark.parametrize(
+    "c,cp",
+    [
+        (5.0, 3.4),   # integral C, 0<kp<k, partial created
+        (5.6, 3.2),   # partial exists, 0<kp<k
+        (5.6, 5.2),   # kp == k (no deletion, swap case)
+        (5.6, 0.7),   # kp == 0 corner
+        (5.6, 3.0),   # fp == 0 (no partial in result)
+        (1.7, 0.4),   # tiny sample
+        (4.0, 4.0),   # identity
+    ],
+)
+def test_downsample_theorem_4_1(c, cp):
+    """Every item's inclusion prob is scaled by exactly C'/C (Theorem 4.1)."""
+    k = math.floor(c)
+    f = c - k
+    probs = _downsample_inclusion(c, cp)
+    scale = cp / c
+    for i in range(k):  # full items: Pr was 1
+        assert abs(probs[i] - scale) < 0.015, (i, probs[i], scale)
+    if f > 0:  # partial item: Pr was frac(c)
+        assert abs(probs[k] - scale * f) < 0.015, (probs[k], scale * f)
+    # nothing else should ever appear
+    for i in range(k + 1 if f > 0 else k, 10):
+        assert probs[i] < 1e-9
+
+
+def test_ref_downsample_theorem_4_1():
+    """Same check for the paper-literal Python reference."""
+    import random
+
+    c, cp = 5.6, 3.2
+    k, f = 5, c - 5
+    hits = np.zeros(7)
+    trials = 30000
+    rnd = random.Random(0)
+    for _ in range(trials):
+        latr = ref.RefLatent(full=list(range(5)), partial=5, weight=c)
+        out = ref.ref_downsample(rnd, latr, cp)
+        for it in out.realize(rnd):
+            hits[it] += 1
+    probs = hits / trials
+    scale = cp / c
+    np.testing.assert_allclose(probs[:5], scale, atol=0.02)
+    assert abs(probs[5] - scale * f) < 0.02
+
+
+# --------------------------------------------------------------------------
+# R-TBS (paper Algorithm 2): Theorem 4.2 invariant + eq. (1)
+# --------------------------------------------------------------------------
+def _analytic_w(batch_sizes, lam):
+    """W_t = sum_j B_j e^{-lam (t-j)} (deterministic)."""
+    w = 0.0
+    out = []
+    for b in batch_sizes:
+        w = math.exp(-lam) * w + b
+        out.append(w)
+    return out
+
+
+def _rtbs_membership(batch_sizes, lam, n, trials, seed=0):
+    """Run R-TBS over the stream; return empirical Pr[item-of-batch-j in S_T]
+    (items within one batch are exchangeable, so we average over the batch).
+
+    Item ids encode their batch: id = 1000*(t+1) + j.
+    """
+    T = len(batch_sizes)
+    bcap = max(batch_sizes)
+    batches = np.zeros((T, bcap), np.int32)
+    for t, b in enumerate(batch_sizes):
+        batches[t, :b] = 1000 * (t + 1) + np.arange(b)
+    batches = jnp.asarray(batches)
+    bcounts = jnp.asarray(batch_sizes, jnp.int32)
+
+    def one(kk):
+        st = rtbs.init(PROTO, n)
+        k_run, k_real = jax.random.split(kk)
+        st, _ = rtbs.run_stream(k_run, st, batches, bcounts, n=n, lam=lam)
+        mask, _ = lt.realize(k_real, st.lat)
+        # per-batch membership count
+        batch_of = st.lat.items // 1000  # 0 for empty slots
+        counts = jnp.zeros((T + 1,), jnp.float32)
+        counts = counts.at[batch_of].add(mask.astype(jnp.float32))
+        return counts[1:]
+
+    counts = jax.vmap(one)(keys(seed, trials))
+    mean_counts = np.asarray(counts.mean(axis=0))
+    return mean_counts / np.maximum(np.asarray(batch_sizes), 1)
+
+
+@pytest.mark.parametrize(
+    "batch_sizes,lam,n",
+    [
+        ([4, 4, 4, 4, 4, 4, 4, 4], 0.3, 8),        # saturates quickly
+        ([2, 2, 2, 2, 2, 2], 0.4, 16),             # never saturates
+        ([12, 0, 0, 3, 9, 1, 5, 7], 0.5, 8),       # wild rates: sat<->unsat flips
+        ([6, 6, 0, 0, 0, 0, 6, 2], 0.8, 8),        # heavy decay, undershoots
+    ],
+)
+def test_rtbs_theorem_4_2(batch_sizes, lam, n):
+    """Pr[i in S_t] == (C_t/W_t) w_t(i) for every batch age (Theorem 4.2)."""
+    T = len(batch_sizes)
+    ws = _analytic_w(batch_sizes, lam)
+    W_T = ws[-1]
+    C_T = min(n, W_T)
+    probs = _rtbs_membership(batch_sizes, lam, n, trials=25000)
+    for j, b in enumerate(batch_sizes):
+        if b == 0:
+            continue
+        w_item = math.exp(-lam * (T - 1 - j))
+        expect = (C_T / W_T) * w_item
+        assert abs(probs[j] - expect) < 0.02, (j, probs[j], expect)
+
+
+def test_rtbs_eq_1_relative_inclusion():
+    """Pr[i in S]/Pr[j in S] == e^{-lam (t_j - t_i)} for all batch pairs (eq. (1))."""
+    batch_sizes = [5, 5, 5, 5, 5, 5]
+    lam, n = 0.35, 10
+    probs = _rtbs_membership(batch_sizes, lam, n, trials=40000)
+    for j in range(len(batch_sizes) - 1):
+        ratio = probs[j] / probs[j + 1]
+        assert abs(ratio - math.exp(-lam)) < 0.06, (j, ratio)
+
+
+def test_rtbs_scalar_trajectories_match_ref():
+    """C_t, W_t are deterministic; JAX and paper-literal ref must agree exactly."""
+    batch_sizes = [3, 9, 0, 2, 14, 0, 0, 1, 6, 8]
+    lam, n = 0.25, 8
+    r = ref.RefRTBS(n=n, lam=lam, seed=1)
+    ref_c, ref_w = [], []
+    for t, b in enumerate(batch_sizes):
+        r.step([1000 * (t + 1) + j for j in range(b)])
+        ref_c.append(r.lat.weight)
+        ref_w.append(r.W)
+
+    bcap = max(batch_sizes)
+    batches = np.zeros((len(batch_sizes), bcap), np.int32)
+    for t, b in enumerate(batch_sizes):
+        batches[t, :b] = 1
+    st = rtbs.init(PROTO, n)
+    st, trace = rtbs.run_stream(
+        jax.random.key(0),
+        st,
+        jnp.asarray(batches),
+        jnp.asarray(batch_sizes, jnp.int32),
+        n=n,
+        lam=lam,
+    )
+    np.testing.assert_allclose(np.asarray(trace["C"]), ref_c, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(trace["W"]), ref_w, rtol=1e-5)
+
+
+def test_rtbs_never_exceeds_n():
+    batch_sizes = [20, 1, 17, 0, 30, 2, 2, 25]
+    n = 8
+
+    def one(kk):
+        st = rtbs.init(PROTO, n)
+        bcap = max(batch_sizes)
+        batches = np.zeros((len(batch_sizes), bcap), np.int32)
+        for t, b in enumerate(batch_sizes):
+            batches[t, :b] = 1
+        k_run, k_real = jax.random.split(kk)
+        st, _ = rtbs.run_stream(
+            k_run,
+            st,
+            jnp.asarray(batches),
+            jnp.asarray(batch_sizes, jnp.int32),
+            n=n,
+            lam=0.2,
+        )
+        _, size = rtbs.realize(k_real, st)
+        return size
+
+    sizes = np.asarray(jax.vmap(one)(keys(7, 2000)))
+    assert sizes.max() <= n
+
+
+def test_ref_rtbs_theorem_4_2():
+    """Paper-literal reference satisfies the same invariant (independent MC)."""
+    batch_sizes = [4, 4, 4, 4, 4, 4]
+    lam, n = 0.3, 8
+    T = len(batch_sizes)
+    ws = _analytic_w(batch_sizes, lam)
+    C_T, W_T = min(n, ws[-1]), ws[-1]
+    hits = np.zeros(T)
+    trials = 12000
+    for tr in range(trials):
+        r = ref.RefRTBS(n=n, lam=lam, seed=tr)
+        for t, b in enumerate(batch_sizes):
+            r.step([1000 * (t + 1) + j for j in range(b)])
+        for it in r.sample():
+            hits[it // 1000 - 1] += 1
+    probs = hits / trials / np.asarray(batch_sizes)
+    for j in range(T):
+        expect = (C_T / W_T) * math.exp(-lam * (T - 1 - j))
+        assert abs(probs[j] - expect) < 0.025, (j, probs[j], expect)
+
+
+# --------------------------------------------------------------------------
+# T-TBS (paper Algorithm 1 / Theorem 3.1)
+# --------------------------------------------------------------------------
+def test_ttbs_mean_size_theorem_3_1_ii():
+    """E[C_t] = n + p^t (C_0 - n); with C_0=0 and t large, E[C_t] -> n."""
+    n, lam, b = 12, 0.3, 8
+    p = math.exp(-lam)
+    q = n * (1 - p) / b
+    assert q <= 1
+    T, trials, bcap, cap = 30, 4000, 8, 64
+
+    batches = jnp.ones((T, bcap), jnp.int32)
+    bcounts = jnp.full((T,), b, jnp.int32)
+
+    def one(kk):
+        st = simple.init(PROTO, cap)
+
+        def body(carry, inp):
+            st = carry
+            items_t, cnt_t, key_t = inp
+            st = simple.ttbs_step(
+                key_t, st, items_t, cnt_t, p=jnp.float32(p), q=jnp.float32(q)
+            )
+            return st, st.count
+
+        st, csizes = jax.lax.scan(body, st, (batches, bcounts, jax.random.split(kk, T)))
+        return csizes, st.overflow
+
+    csizes, overflow = jax.vmap(one)(keys(11, trials))
+    csizes = np.asarray(csizes, np.float64)
+    assert int(np.asarray(overflow).sum()) == 0  # cap chosen large enough
+    for t in [4, 9, 19, 29]:
+        expect = n + (p ** (t + 1)) * (0 - n)
+        emp = csizes[:, t].mean()
+        assert abs(emp - expect) < 0.35, (t, emp, expect)
+
+
+def test_ttbs_eq1_inclusion():
+    """T-TBS item inclusion: Pr[x in S_t'] = q e^{-lam (t'-t)} (Sec. 3)."""
+    n, lam, b = 6, 0.4, 10
+    p = math.exp(-lam)
+    q = n * (1 - p) / b
+    T, trials, bcap, cap = 6, 30000, 10, 64
+    batches = np.zeros((T, bcap), np.int32)
+    for t in range(T):
+        batches[t, :b] = 1000 * (t + 1) + np.arange(b)
+    batches = jnp.asarray(batches)
+    bcounts = jnp.full((T,), b, jnp.int32)
+
+    def one(kk):
+        st = simple.init(PROTO, cap)
+
+        def body(carry, inp):
+            st = carry
+            items_t, cnt_t, key_t = inp
+            return (
+                simple.ttbs_step(
+                    key_t, st, items_t, cnt_t, p=jnp.float32(p), q=jnp.float32(q)
+                ),
+                None,
+            )
+
+        st, _ = jax.lax.scan(body, st, (batches, bcounts, jax.random.split(kk, T)))
+        mask = jnp.arange(cap) < st.count
+        batch_of = st.items // 1000
+        counts = jnp.zeros((T + 1,), jnp.float32).at[batch_of].add(
+            mask.astype(jnp.float32)
+        )
+        return counts[1:]
+
+    counts = np.asarray(jax.vmap(one)(keys(12, trials)).mean(axis=0))
+    probs = counts / b
+    for j in range(T):
+        expect = q * math.exp(-lam * (T - 1 - j))
+        assert abs(probs[j] - expect) < 0.015, (j, probs[j], expect)
+
+
+# --------------------------------------------------------------------------
+# B-RS uniformity + SW semantics
+# --------------------------------------------------------------------------
+def test_brs_uniform_inclusion():
+    n = 6
+    batch_sizes = [4, 7, 2, 9, 3]
+    total = sum(batch_sizes)
+    T, bcap, cap = len(batch_sizes), max(batch_sizes), 8
+    batches = np.zeros((T, bcap), np.int32)
+    for t, b in enumerate(batch_sizes):
+        batches[t, :b] = 1000 * (t + 1) + np.arange(b)
+    batches = jnp.asarray(batches)
+    bcounts = jnp.asarray(batch_sizes, jnp.int32)
+
+    def one(kk):
+        st = simple.init(PROTO, cap)
+
+        def body(carry, inp):
+            st = carry
+            items_t, cnt_t, key_t = inp
+            return simple.brs_step(key_t, st, items_t, cnt_t, n=n), None
+
+        st, _ = jax.lax.scan(body, st, (batches, bcounts, jax.random.split(kk, T)))
+        mask = jnp.arange(cap) < st.count
+        batch_of = st.items // 1000
+        counts = jnp.zeros((T + 1,), jnp.float32).at[batch_of].add(
+            mask.astype(jnp.float32)
+        )
+        return counts[1:], st.count
+
+    counts, csize = jax.vmap(one)(keys(13, 30000))
+    assert (np.asarray(csize) == n).all()
+    probs = np.asarray(counts.mean(axis=0)) / np.asarray(batch_sizes)
+    np.testing.assert_allclose(probs, n / total, atol=0.02)
+
+
+def test_sliding_window_exact():
+    n, bcap, cap = 5, 4, 8
+    batch_sizes = [3, 4, 2, 4]
+    T = len(batch_sizes)
+    batches = np.zeros((T, bcap), np.int32)
+    nid = 1
+    order = []
+    for t, b in enumerate(batch_sizes):
+        for j in range(b):
+            batches[t, j] = nid
+            order.append(nid)
+            nid += 1
+    st = simple.init(PROTO, cap)
+    for t in range(T):
+        st = simple.sw_step(
+            jax.random.key(t),
+            st,
+            jnp.asarray(batches[t]),
+            jnp.int32(batch_sizes[t]),
+            n=n,
+        )
+    got = sorted(np.asarray(st.items)[: int(st.count)].tolist())
+    assert got == sorted(order[-n:])
+
+
+# --------------------------------------------------------------------------
+# B-Chao: reproduce the paper's Appendix-D claim that eq. (1) is violated
+# --------------------------------------------------------------------------
+def test_bchao_violates_eq1_during_fillup():
+    """During fill-up every arriving item is kept w.p. 1, so the inclusion-prob
+    ratio between consecutive batches is 1 instead of e^{-lam} (Appendix D)."""
+    lam, n = 0.5, 12
+    trials = 4000
+    hits = np.zeros(2)
+    for tr in range(trials):
+        c = ref.RefBChao(n=n, lam=lam, seed=tr)
+        c.step([100 + j for j in range(4)])
+        c.step([200 + j for j in range(4)])  # still filling up: 8 < 12
+        s = c.sample()
+        hits[0] += sum(1 for x in s if 100 <= x < 200)
+        hits[1] += sum(1 for x in s if 200 <= x < 300)
+    probs = hits / trials / 4
+    ratio = probs[0] / probs[1]
+    # B-Chao keeps everything during fill-up: ratio == 1, violating e^{-0.5}=0.61
+    assert abs(ratio - 1.0) < 0.05
+    assert abs(ratio - math.exp(-lam)) > 0.25
+
+
+def test_bchao_respects_capacity():
+    c = ref.RefBChao(n=5, lam=0.2, seed=0)
+    for t in range(10):
+        c.step([t * 100 + j for j in range(7)])
+        assert len(c.sample()) <= 5

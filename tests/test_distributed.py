@@ -1,0 +1,36 @@
+"""D-R-TBS (paper Sec. 5) validation.
+
+The heavy statistical check runs in a subprocess with 8 forced host devices so
+the main pytest process keeps its default single-device jax (smoke tests and
+benchmarks must see 1 device; see the dry-run launcher for the 512-device case).
+"""
+import os
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+HERE = pathlib.Path(__file__).parent
+SRC = str(HERE.parent / "src")
+
+
+def _run(script, timeout=900):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    env.pop("XLA_FLAGS", None)  # the script sets its own device count
+    proc = subprocess.run(
+        [sys.executable, str(HERE / script)],
+        capture_output=True,
+        text=True,
+        timeout=timeout,
+        env=env,
+    )
+    assert proc.returncode == 0, f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr}"
+    return proc.stdout
+
+
+def test_drtbs_8shard_statistics():
+    """Theorem 4.2 + size bound + trajectories on a real 8-device mesh."""
+    out = _run("_drtbs_stat_check.py")
+    assert "statistical checks passed" in out

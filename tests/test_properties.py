@@ -1,0 +1,151 @@
+"""Hypothesis property-based tests on the system's invariants.
+
+Shapes are FIXED per test (one jit compile); hypothesis drives the *values*
+(batch-size sequences, decay rates, masks), so hundreds of examples run in
+seconds on one core.
+"""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import latent as lt
+from repro.core import ref, rng, rtbs
+from repro.data.streams import TokenDriftStream
+
+PROTO = jax.ShapeDtypeStruct((), jnp.int32)
+N = 8
+BCAP = 16
+T = 10
+
+_step = jax.jit(
+    lambda key, st_, items, cnt, lam: rtbs.step(
+        key, st_, items, cnt, n=N, lam=lam
+    )
+)
+
+
+def _run(batch_sizes, lam, seed=0):
+    st_ = rtbs.init(PROTO, N)
+    items = jnp.arange(BCAP, dtype=jnp.int32)
+    cs, ws = [], []
+    for t, b in enumerate(batch_sizes):
+        st_ = _step(
+            jax.random.fold_in(jax.random.key(seed), t),
+            st_, items + 100 * t, jnp.int32(b), jnp.float32(lam),
+        )
+        cs.append(float(st_.lat.weight))
+        ws.append(float(st_.total_weight))
+    return st_, cs, ws
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    batch_sizes=st.lists(st.integers(0, BCAP), min_size=1, max_size=T),
+    lam=st.floats(0.01, 1.5),
+    seed=st.integers(0, 1000),
+)
+def test_rtbs_bookkeeping_invariants(batch_sizes, lam, seed):
+    """For ANY batch-size sequence and decay rate:
+      (a) C_t == min(n, W_t) to float tolerance,
+      (b) W_t follows the decay recurrence exactly,
+      (c) floor(C_t) == stored full count, and the realized size is <= n."""
+    st_, cs, ws = _run(batch_sizes, lam, seed)
+    w = 0.0
+    for t, b in enumerate(batch_sizes):
+        w = math.exp(-lam) * w + b
+        assert abs(ws[t] - w) < 1e-3 * max(1.0, w) + 1e-4
+        assert abs(cs[t] - min(N, w)) < 1e-3 * max(1.0, w) + 1e-4
+    assert int(st_.lat.nfull) == int(np.floor(cs[-1] + 1e-4))
+    mask, size = rtbs.realize(jax.random.key(seed + 1), st_)
+    assert int(size) <= N
+    assert int(np.asarray(mask).sum()) == int(size)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    batch_sizes=st.lists(st.integers(0, BCAP), min_size=2, max_size=T),
+    lam=st.floats(0.05, 1.0),
+    seed=st.integers(0, 1000),
+)
+def test_rtbs_trajectories_match_paper_literal_ref(batch_sizes, lam, seed):
+    """The deterministic scalars of the JAX impl and the paper-literal Python
+    reference agree on any stream."""
+    _, cs, ws = _run(batch_sizes, lam, seed)
+    r = ref.RefRTBS(n=N, lam=lam, seed=seed)
+    for t, b in enumerate(batch_sizes):
+        r.step(list(range(b)))
+        assert abs(r.W - ws[t]) < 1e-3 * max(1.0, r.W) + 1e-4
+        assert abs(r.lat.weight - cs[t]) < 1e-3 * max(1.0, r.lat.weight) + 1e-4
+
+
+_ds = jax.jit(lambda key, lat_, c2: lt.downsample(key, lat_, c2))
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    c=st.floats(0.5, 9.9),
+    frac_to=st.floats(0.05, 1.0),
+    seed=st.integers(0, 10_000),
+)
+def test_downsample_weight_algebra(c, frac_to, seed):
+    """downsample(C -> C') always produces weight C', floor(C') full items,
+    and only items that existed before (no fabrication)."""
+    cap = 11
+    k = math.floor(c)
+    ids = jnp.arange(cap, dtype=jnp.int32) + 1
+    lat = lt.Latent(items=ids, nfull=jnp.int32(k), weight=jnp.float32(c))
+    c2 = max(min(c * frac_to, c), 1e-3)
+    out = _ds(jax.random.key(seed), lat, jnp.float32(c2))
+    assert abs(float(out.weight) - min(c2, c)) < 1e-5
+    assert int(out.nfull) == math.floor(min(c2, c))
+    live = int(out.nfull) + (1 if (min(c2, c) % 1.0) > 0 else 0)
+    valid_src = set(np.asarray(ids)[: k + (1 if c % 1.0 > 0 else 0)].tolist())
+    got = np.asarray(out.items)[:live].tolist()
+    assert set(got) <= valid_src
+    assert len(set(got)) == len(got)  # no duplicates among live slots
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    k=st.integers(0, 20),
+    a=st.integers(0, 20),
+    b=st.integers(0, 20),
+    seed=st.integers(0, 10_000),
+)
+def test_hypergeometric_support(k, a, b, seed):
+    """Draws always land in [max(0, k-b), min(a, k)] (valid k only)."""
+    k = min(k, a + b)
+    x = int(rng.hypergeometric(jax.random.key(seed), k, a, b, max_support=64))
+    assert max(0, k - b) <= x <= min(a, k)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    total=st.integers(0, 30),
+    counts=st.lists(st.integers(0, 10), min_size=2, max_size=6),
+    seed=st.integers(0, 10_000),
+)
+def test_mvhg_partition(total, counts, seed):
+    """Multivariate-hypergeometric splits are exact partitions within bounds."""
+    csum = sum(counts)
+    total = min(total, csum)
+    xs = rng.multivariate_hypergeometric(
+        jax.random.key(seed), total, jnp.asarray(counts, jnp.int32),
+        max_support=16,
+    )
+    xs = np.asarray(xs)
+    assert xs.sum() == total
+    assert (xs >= 0).all() and (xs <= np.asarray(counts)).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 1000), mode=st.integers(0, 1))
+def test_stream_determinism(seed, mode):
+    """Streams are pure functions of (seed, t, mode): the replay contract
+    behind bit-exact checkpoint restarts."""
+    s1 = TokenDriftStream(seed=seed).batch(3, 8, mode)
+    s2 = TokenDriftStream(seed=seed).batch(3, 8, mode)
+    np.testing.assert_array_equal(s1, s2)

@@ -1,0 +1,133 @@
+"""Per-architecture smoke tests (assignment requirement): instantiate a REDUCED
+same-family config, run one forward + one train-grad step + one decode step on
+CPU; assert output shapes and finiteness. Full configs are exercised only via
+the dry-run (ShapeDtypeStruct lowering, no allocation)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import ARCH_IDS, get_config, get_smoke_config
+from repro.models import zoo
+
+SEQ = 16
+BATCH = 2
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_config_loads(arch):
+    cfg = get_config(arch)
+    assert cfg.param_count() > 0
+    assert cfg.padded_vocab % 256 == 0
+    assert cfg.active_param_count() <= cfg.param_count()
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_and_grad(arch):
+    cfg = get_smoke_config(arch)
+    api = zoo.build(cfg)
+    params = api.init_params(jax.random.key(0))
+    batch = zoo.make_demo_batch(cfg, jax.random.key(1), BATCH, SEQ)
+
+    logits = jax.jit(api.forward)(params, batch)
+    S_total = SEQ if cfg.family != "vlm" else SEQ  # vlm: prefix + text == SEQ
+    assert logits.shape[0] == BATCH
+    assert logits.shape[-1] == cfg.padded_vocab
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
+
+    loss, grads = jax.jit(jax.value_and_grad(api.loss))(params, batch)
+    assert np.isfinite(float(loss))
+    flat = jax.tree_util.tree_leaves(grads)
+    assert all(bool(jnp.isfinite(g.astype(jnp.float32)).all()) for g in flat)
+    # at least some gradient signal
+    gnorm = sum(float(jnp.sum(jnp.square(g.astype(jnp.float32)))) for g in flat)
+    assert gnorm > 0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_decode(arch):
+    cfg = get_smoke_config(arch)
+    api = zoo.build(cfg)
+    params = api.init_params(jax.random.key(0))
+    caches = api.init_decode_state(BATCH, max_len=SEQ + 4, prefill_len=0)
+    if cfg.family == "audio":
+        from repro.models import encdec
+
+        enc_out = encdec.encode(
+            cfg, params,
+            jax.random.normal(jax.random.key(2), (BATCH, cfg.encoder_seq, cfg.d_model)),
+        )
+        caches["cross"] = encdec.precompute_cross(cfg, params, enc_out)
+    tok = jnp.zeros((BATCH, 1), jnp.int32)
+    step = jax.jit(api.decode_step)
+    for _ in range(3):
+        logits, caches = step(params, caches, tok)
+        assert logits.shape == (BATCH, 1, cfg.padded_vocab)
+        assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
+        tok = jnp.argmax(logits[:, :, : cfg.vocab_size], axis=-1).astype(jnp.int32)
+
+
+def test_decode_matches_forward_dense():
+    """Teacher-forced decode must reproduce the training forward's logits
+    (same params, same tokens) -- validates cache semantics end-to-end."""
+    cfg = get_smoke_config("stablelm_12b")
+    api = zoo.build(cfg)
+    params = api.init_params(jax.random.key(0))
+    toks = jax.random.randint(jax.random.key(3), (BATCH, 8), 0, cfg.vocab_size)
+    full = api.forward(params, {"tokens": toks})
+    caches = api.init_decode_state(BATCH, max_len=12, prefill_len=0)
+    outs = []
+    for t in range(8):
+        logits, caches = api.decode_step(params, caches, toks[:, t : t + 1])
+        outs.append(logits[:, 0])
+    dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(
+        np.asarray(full, np.float32), np.asarray(dec, np.float32),
+        atol=3e-2, rtol=3e-2,
+    )
+
+
+def test_decode_matches_forward_ssm():
+    """Same check for the recurrent (Mamba2) path: chunked SSD == step recurrence."""
+    cfg = get_smoke_config("mamba2_370m")
+    api = zoo.build(cfg)
+    params = api.init_params(jax.random.key(0))
+    toks = jax.random.randint(jax.random.key(4), (BATCH, 8), 0, cfg.vocab_size)
+    full = api.forward(params, {"tokens": toks})
+    caches = api.init_decode_state(BATCH, max_len=12, prefill_len=0)
+    outs = []
+    for t in range(8):
+        logits, caches = api.decode_step(params, caches, toks[:, t : t + 1])
+        outs.append(logits[:, 0])
+    dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(
+        np.asarray(full, np.float32), np.asarray(dec, np.float32),
+        atol=5e-2, rtol=5e-2,
+    )
+
+
+def test_swa_masks_long_context():
+    """Sliding-window attention must ignore tokens beyond the receptive field:
+    with L layers and window W, position p only sees [p - L*(W-1), p].
+
+    Uses a DENSE config + SWA: MoE capacity dispatch couples tokens globally
+    (a perturbed token shifts the sort-based dispatch order), so mixtral's own
+    smoke config cannot isolate the attention mask."""
+    import dataclasses as _dc
+
+    from repro.configs.stablelm_12b import SMOKE as _base
+
+    cfg = _dc.replace(_base, sliding_window=16)
+    S = 48  # receptive field of last pos = 2 layers * 15 = 30 < 47
+    api = zoo.build(cfg)
+    params = api.init_params(jax.random.key(0))
+    toks = jax.random.randint(jax.random.key(5), (1, S), 0, cfg.vocab_size)
+    logits = api.forward(params, {"tokens": toks})
+    # perturb a token outside the last position's receptive field
+    toks2 = toks.at[0, 0].set((int(toks[0, 0]) + 1) % cfg.vocab_size)
+    logits2 = api.forward(params, {"tokens": toks2})
+    last = np.asarray(logits[0, -1], np.float32)
+    last2 = np.asarray(logits2[0, -1], np.float32)
+    np.testing.assert_allclose(last, last2, atol=1e-4)
+    # ...and the full-attention positions DO change (sanity of the probe)
+    assert np.abs(np.asarray(logits[0, 1] - logits2[0, 1], np.float32)).max() > 1e-6
