@@ -40,10 +40,9 @@ D = 8                                 # item payload: D int32s ~ a record
 
 
 def main():
-    mesh = jax.make_mesh(
-        (SHARDS,), (dist.AXIS,),
-        axis_types=(jax.sharding.AxisType.Auto,),
-    )
+    from repro.launch.mesh import make_mesh
+
+    mesh = make_mesh((SHARDS,), (dist.AXIS,))
     step = functools.partial(dist.drtbs_shard_step, n=N_GLOBAL, lam=LAM)
 
     def shard_fn(key, items, nfull, partial, weight, tweight, oflow, bi, bc):
@@ -84,14 +83,13 @@ def main():
                 st.total_weight, st.overflow[None])
 
     smapped = jax.jit(
-        jax.shard_map(
+        dist.shard_map(
             shard_fn,
             mesh=mesh,
             in_specs=(P(), P(dist.AXIS), P(dist.AXIS), P(), P(), P(),
                       P(dist.AXIS), P(dist.AXIS), P(dist.AXIS)),
             out_specs=(P(dist.AXIS), P(dist.AXIS), P(), P(), P(),
                        P(dist.AXIS)),
-            check_vma=False,
         )
     )
 

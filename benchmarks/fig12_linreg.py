@@ -3,66 +3,58 @@
 equilibrium weight), plus 10% ES robustness. Reduced scale; qualitative
 claims reproduced: R-TBS best MSE and best-or-near-best ES; in the
 unsaturated regime R-TBS beats SW/Unif DESPITE a smaller realized sample
-("more data is not always better", Sec. 6.3)."""
+("more data is not always better", Sec. 6.3).
+
+Runs on the unified API: one fused :func:`repro.manage.make_run_loop` scan per
+(scheme, regime), re-dispatched across stream seeds."""
 from __future__ import annotations
 
 import math
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import rtbs, simple
+from repro.core.api import make_sampler
 from repro.data.streams import LinRegStream, mode_schedule
-from repro.models.simple_ml import expected_shortfall, linreg_fit, linreg_predict
+from repro.manage import make_model, make_run_loop, materialize_stream
+from repro.models.simple_ml import expected_shortfall
 
-ITEM = {"x": jax.ShapeDtypeStruct((2,), jnp.float32),
-        "y": jax.ShapeDtypeStruct((), jnp.float32)}
 B = 100
 WARM = 25
 T = 40
 LAM = 0.07
 
+SCHEMES = {
+    "rtbs": lambda n: make_sampler("rtbs", n=n, lam=LAM),
+    "sw": lambda n: make_sampler("sw", n=n),
+    "unif": lambda n: make_sampler("brs", n=n),
+}
 
-def run_one(method, n, seed=0):
-    s = LinRegStream(seed=seed)
-    st = rtbs.init(ITEM, n) if method == "rtbs" else simple.init(ITEM, n)
-    mses = []
-    sample_sizes = []
-    for t in range(WARM + T):
-        mode = 0 if t < WARM else mode_schedule("periodic", t - WARM)
-        x, y = s.batch(t, B, mode)
-        items = {"x": jnp.asarray(x), "y": jnp.asarray(y)}
-        key = jax.random.fold_in(jax.random.key(seed + 31), t)
-        if t >= WARM:
-            if method == "rtbs":
-                mask, size = rtbs.realize(jax.random.fold_in(key, 1), st)
-                sx, sy = st.lat.items["x"], st.lat.items["y"]
-            else:
-                mask, size = simple.realize_all(st)
-                sx, sy = st.items["x"], st.items["y"]
-            coef = linreg_fit(sx, sy, mask)
-            pred = np.asarray(linreg_predict(coef, jnp.asarray(x)))
-            mses.append(float(np.mean((pred - y) ** 2)))
-            sample_sizes.append(int(size))
-        if method == "rtbs":
-            st = rtbs.step(key, st, items, jnp.int32(B), n=n, lam=LAM)
-        elif method == "sw":
-            st = simple.sw_step(key, st, items, jnp.int32(B), n=n)
-        else:
-            st = simple.brs_step(key, st, items, jnp.int32(B), n=n)
+
+def run_one(run, seed=0):
+    batches, bcounts = materialize_stream(
+        LinRegStream(seed=seed), WARM + T, batch_size=B,
+        mode=lambda t: 0 if t < WARM else mode_schedule("periodic", t - WARM),
+    )
+    _, _, trace = run(jax.random.fold_in(jax.random.key(31), seed),
+                      batches, bcounts)
+    mses = np.asarray(trace["metric"])[WARM:]
+    sizes = np.asarray(trace["size"])[WARM:]
     return (float(np.mean(mses)), expected_shortfall(mses[20:], 0.10),
-            float(np.mean(sample_sizes)))
+            float(np.mean(sizes)))
 
 
 def run():
     rows = []
+    model = make_model("linreg", dim=2)
     eq_weight = B / (1 - math.exp(-LAM))  # R-TBS equilibrium ~ 1479 @ B=100
     for regime, n in (("saturated", 400), ("unsaturated", 1600)):
-        for method in ("rtbs", "sw", "unif"):
+        for method, build in SCHEMES.items():
+            loop = make_run_loop(build(n), model, retrain_every=1)
+            run_one(loop, seed=0)  # compile outside the timed region
             t0 = time.perf_counter()
-            out = [run_one(method, n, seed=s) for s in range(3)]
+            out = [run_one(loop, seed=s) for s in range(3)]
             us = (time.perf_counter() - t0) / 3 * 1e6
             mse = float(np.mean([o[0] for o in out]))
             es = float(np.mean([o[1] for o in out]))

@@ -1,0 +1,92 @@
+"""Fused vs. unfused online model-management loop (DESIGN.md Sec. 8).
+
+Measures ticks/sec of the paper's stream -> sample -> retrain -> eval loop:
+
+  * ``unfused`` -- the pre-API idiom: one Python iteration per tick calling
+    individually jitted step/extract/fit/evaluate (4 dispatches/tick, metrics
+    pulled to host each tick).
+  * ``fused``   -- :func:`repro.manage.make_run_loop`: the whole stream in a
+    single jitted ``lax.scan``.
+  * ``farm32``  -- the fused loop ``vmap``-ed over 32 Monte-Carlo trials
+    (Fig. 12/13 robustness protocol); throughput counts trials x ticks.
+
+Same keys, same trace -- the fused/unfused equivalence is asserted before
+timing (and unit-tested in tests/test_api.py).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.core.api import make_sampler
+from repro.data.streams import LinRegStream, mode_schedule
+from repro.manage import (
+    make_manage_step,
+    make_model,
+    make_run_farm,
+    make_run_loop,
+    materialize_stream,
+)
+from repro.manage.loop import item_proto
+
+from .common import time_fn
+
+T = 200
+B = 100
+N = 400
+LAM = 0.07
+TRIALS = 32
+
+
+def run():
+    sampler = make_sampler("rtbs", n=N, lam=LAM)
+    model = make_model("linreg", dim=2)
+    batches, bcounts = materialize_stream(
+        LinRegStream(seed=0), T, batch_size=B,
+        mode=lambda t: mode_schedule("periodic", t),
+    )
+    key = jax.random.key(0)
+
+    tick = jax.jit(make_manage_step(sampler, model), static_argnames=())
+    fused = make_run_loop(sampler, model)
+    farm = make_run_farm(sampler, model)
+
+    def unfused(key, batches, bcounts):
+        state = sampler.init(item_proto(batches))
+        params = model.init()
+        metrics = []
+        for t in range(T):
+            bt = jax.tree_util.tree_map(lambda a: a[t], batches)
+            state, params, m = tick(key, t, state, params, bt, bcounts[t])
+            metrics.append(float(m["metric"]))  # host pull, as the old drivers did
+        return state, params, np.asarray(metrics)
+
+    # equivalence before timing: same keys => identical metric traces
+    _, _, trace = fused(key, batches, bcounts)
+    _, _, m_unfused = unfused(key, batches, bcounts)
+    np.testing.assert_allclose(
+        np.asarray(trace["metric"]), m_unfused, rtol=1e-5
+    )
+
+    rows = []
+    t_unf = time_fn(unfused, key, batches, bcounts, iters=5) / 1e6  # -> s
+    rows.append(("manage_loop_unfused", t_unf / T * 1e6,
+                 {"ticks_per_s": round(T / t_unf, 1)}))
+
+    t_fus = time_fn(fused, key, batches, bcounts) / 1e6
+    rows.append(("manage_loop_fused", t_fus / T * 1e6,
+                 {"ticks_per_s": round(T / t_fus, 1),
+                  "speedup_vs_unfused": round(t_unf / t_fus, 2)}))
+
+    t_farm = time_fn(farm, key, TRIALS, batches, bcounts) / 1e6
+    work = T * TRIALS
+    rows.append(("manage_loop_farm32", t_farm / work * 1e6,
+                 {"trial_ticks_per_s": round(work / t_farm, 1),
+                  "trials": TRIALS}))
+    return rows
+
+
+if __name__ == "__main__":
+    from .common import emit
+
+    emit(run())

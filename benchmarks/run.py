@@ -17,7 +17,7 @@ import time
 
 from .common import emit
 
-SUITES = ["fig1", "table1", "fig12", "fig13", "fig789", "roofline"]
+SUITES = ["fig1", "table1", "fig12", "fig13", "fig789", "manage", "roofline"]
 
 
 def main() -> None:
@@ -34,6 +34,8 @@ def main() -> None:
             from . import fig13_nb as m
         elif name == "fig789":
             from . import fig789_distributed as m
+        elif name == "manage":
+            from . import manage_loop as m
         elif name == "roofline":
             from . import roofline as m
         else:

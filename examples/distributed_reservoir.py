@@ -20,11 +20,11 @@ import jax.numpy as jnp  # noqa: E402
 from jax.sharding import PartitionSpec as P  # noqa: E402
 
 from repro.core import distributed as dist  # noqa: E402
+from repro.launch.mesh import make_mesh  # noqa: E402
 
 S, CAP_S, BPS, N, LAM = 8, 64, 16, 100, 0.1
 
-mesh = jax.make_mesh((S,), (dist.AXIS,),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh((S,), (dist.AXIS,))
 step = functools.partial(dist.drtbs_shard_step, n=N, lam=LAM)
 
 
@@ -36,12 +36,11 @@ def shard_fn(key, items, nfull, partial, weight, tweight, oflow, bi, bc):
             st.total_weight, st.overflow[None])
 
 
-smapped = jax.jit(jax.shard_map(
+smapped = jax.jit(dist.shard_map(
     shard_fn, mesh=mesh,
     in_specs=(P(), P(dist.AXIS), P(dist.AXIS), P(), P(), P(), P(dist.AXIS),
               P(dist.AXIS), P(dist.AXIS)),
     out_specs=(P(dist.AXIS), P(dist.AXIS), P(), P(), P(), P(dist.AXIS)),
-    check_vma=False,
 ))
 
 state = (

@@ -5,7 +5,8 @@ lifted to the LM zoo).
 Uses the reduced stablelm-family config so it runs on CPU in ~2 minutes; pass
 --preset full --arch <id> on a real pod. The run prints prequential eval loss
 around two drift events: watch it spike at the mode flips and recover after
-the next retraining.
+the next retraining. The sampler is swappable: try ``--scheme sw`` or
+``--scheme brs`` to see the time-biased sample's advantage disappear.
 
 Run: PYTHONPATH=src python examples/lm_online_management.py
 """
@@ -14,6 +15,7 @@ from repro.launch.train import main
 if __name__ == "__main__":
     log = main([
         "--arch", "stablelm_12b",
+        "--scheme", "rtbs",
         "--preset", "smoke",
         "--ticks", "24",
         "--batch-per-tick", "24",

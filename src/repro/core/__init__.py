@@ -1,6 +1,7 @@
 """repro.core -- the paper's contribution: temporally-biased sampling schemes.
 
 JAX (fixed-shape, jit/scan/shard_map-safe) implementations:
+  * :mod:`repro.core.api`     -- the unified Sampler protocol + string registry
   * :mod:`repro.core.rtbs`    -- R-TBS (Algorithm 2+3), the paper's main algorithm
   * :mod:`repro.core.simple`  -- T-TBS (Alg. 1), B-TBS (Alg. 4), B-RS (Alg. 5), SW
   * :mod:`repro.core.latent`  -- latent fractional samples + downsampling (Alg. 3)
@@ -9,6 +10,7 @@ JAX (fixed-shape, jit/scan/shard_map-safe) implementations:
 
 Paper-literal Python oracles (incl. B-Chao, Appendix D): :mod:`repro.core.ref`.
 """
-from . import latent, ref, rng, rtbs, simple  # noqa: F401
+from . import api, latent, ref, rng, rtbs, simple  # noqa: F401
+from .api import SampleView, Sampler, available_schemes, make_sampler  # noqa: F401
 from .latent import Latent, downsample, realize  # noqa: F401
 from .rtbs import RTBSState, init as rtbs_init, step as rtbs_step  # noqa: F401

@@ -1,0 +1,288 @@
+"""Unified Sampler API: every scheme in the repo behind one interface.
+
+The paper's experiments (Sec. 6) and its production framing (Sec. 5) both need
+schemes to be *swappable*: the same stream -> sample -> retrain -> eval loop
+is run with R-TBS, T-TBS, B-TBS, uniform reservoir sampling and sliding
+windows, differing only in the sampler. This module is that seam
+(DESIGN.md Sec. 8):
+
+  * :class:`Sampler`    -- the protocol object: ``init / step / extract``
+                           closures with hyperparameters baked in, all
+                           jit/scan/vmap-safe.
+  * :class:`SampleView` -- the realized sample as fixed-shape arrays:
+                           (items pytree, membership mask, size).
+  * :func:`make_sampler` / :func:`available_schemes` -- string registry, e.g.
+                           ``make_sampler("rtbs", n=300, lam=0.1)``.
+
+Registered schemes (paper reference in parentheses):
+
+  ========  =====================================  ==========================
+  name      implementation                         hyperparameters
+  ========  =====================================  ==========================
+  rtbs      :mod:`repro.core.rtbs` (Alg. 2)        n, lam
+  ttbs      :mod:`repro.core.simple` (Alg. 1)      n, lam, batch_size, [cap]
+  btbs      :mod:`repro.core.simple` (Alg. 4)      lam, cap
+  brs       :mod:`repro.core.simple` (Alg. 5)      n          ("Unif")
+  sw        :mod:`repro.core.simple`               n          (sliding window)
+  dttbs     :mod:`repro.core.distributed` (S.5.1)  n, lam, batch_size, [cap]
+  drtbs     :mod:`repro.core.distributed` (S.5.2)  n, lam, cap_s
+  ========  =====================================  ==========================
+
+``dttbs``/``drtbs`` build *per-shard* step closures: their ``step``/``extract``
+must run inside ``jax.shard_map`` over the ``data`` mesh axis (see
+:data:`repro.core.distributed.AXIS`); the local schemes run anywhere.
+
+Conventions shared by every scheme:
+
+  * ``init(item_proto)`` takes a pytree of arrays / ``ShapeDtypeStruct``s
+    describing ONE item and returns the sampler state (a pytree).
+  * ``step(key, state, batch_items, bcount)`` consumes one arriving batch --
+    a pytree with leading dim ``bcap`` of which the first ``bcount`` rows are
+    valid -- and returns the new state. Fixed shapes throughout: safe under
+    ``jit``, ``lax.scan`` and ``vmap`` (Monte-Carlo farms).
+  * ``extract(key, state)`` realizes the current sample as a
+    :class:`SampleView`; for deterministic-membership schemes the key is
+    unused. ``view.items`` rows where ``view.mask`` is False are garbage.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Mapping
+
+import jax
+import jax.numpy as jnp
+
+from . import distributed, rtbs, simple
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class SampleView:
+    """A realized sample S_t in fixed-shape form.
+
+    ``items``: pytree, leaves [cap, ...]; ``mask``: bool [cap] membership;
+    ``size``: int32 |S_t| (== mask.sum()). Rows with mask False are garbage.
+    """
+
+    items: Any
+    mask: jax.Array
+    size: jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class Sampler:
+    """A sampling scheme bound to its hyperparameters.
+
+    Not a pytree: the *state* returned by ``init`` is the pytree that flows
+    through ``jit``/``scan``; the Sampler itself is a static bundle of
+    closures (close over it freely inside jitted functions).
+    """
+
+    scheme: str
+    init: Callable[[Any], Any]
+    step: Callable[[jax.Array, Any, Any, jax.Array], Any]
+    extract: Callable[[jax.Array, Any], SampleView]
+    hyper: Mapping[str, Any]
+    distributed: bool = False
+
+    def __repr__(self) -> str:  # keep hyper readable in logs/tracebacks
+        hp = ", ".join(f"{k}={v}" for k, v in self.hyper.items())
+        return f"Sampler({self.scheme}, {hp})"
+
+
+_REGISTRY: dict[str, Callable[..., Sampler]] = {}
+
+
+def register(name: str):
+    """Decorator: register a ``**hyper -> Sampler`` builder under ``name``."""
+
+    def deco(fn):
+        _REGISTRY[name] = fn
+        return fn
+
+    return deco
+
+
+def available_schemes() -> tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def make_sampler(scheme: str, **hyper) -> Sampler:
+    """Construct a registered scheme, e.g. ``make_sampler("rtbs", n=300, lam=0.1)``."""
+    try:
+        builder = _REGISTRY[scheme]
+    except KeyError:
+        raise ValueError(
+            f"unknown sampling scheme {scheme!r}; available: {available_schemes()}"
+        ) from None
+    return builder(**hyper)
+
+
+def _ttbs_rates(n: int, lam: float, batch_size: float) -> tuple[float, float]:
+    """Alg. 1 parameterization: p = e^{-lam}; q = n(1-p)/b (must be <= 1)."""
+    p = math.exp(-lam)
+    q = n * (1.0 - p) / batch_size
+    if not 0.0 < q <= 1.0:
+        raise ValueError(
+            f"T-TBS needs q = n(1-e^-lam)/b in (0, 1]; got q={q:.4f} "
+            f"(n={n}, lam={lam}, batch_size={batch_size})"
+        )
+    return p, q
+
+
+def _buffer_extract(key: jax.Array, state: simple.BufferState) -> SampleView:
+    del key  # membership is deterministic: the sample IS the buffer
+    mask, size = simple.realize_all(state)
+    return SampleView(items=state.items, mask=mask, size=size)
+
+
+# ---------------------------------------------------------------------------
+# local schemes
+# ---------------------------------------------------------------------------
+@register("rtbs")
+def _make_rtbs(*, n: int, lam: float) -> Sampler:
+    """R-TBS (paper Alg. 2): bounded size + exact time bias at any rate."""
+
+    def step(key, state, batch_items, bcount):
+        return rtbs.step(key, state, batch_items, bcount, n=n, lam=lam)
+
+    def extract(key, state):
+        mask, size = rtbs.realize(key, state)
+        return SampleView(items=state.lat.items, mask=mask, size=size)
+
+    return Sampler(
+        scheme="rtbs",
+        init=lambda proto: rtbs.init(proto, n),
+        step=step,
+        extract=extract,
+        hyper={"n": n, "lam": lam},
+    )
+
+
+@register("ttbs")
+def _make_ttbs(*, n: int, lam: float, batch_size: float, cap: int | None = None) -> Sampler:
+    """T-TBS (paper Alg. 1): exact eq. (1), size controlled only in mean."""
+    p, q = _ttbs_rates(n, lam, batch_size)
+    cap = 4 * n if cap is None else cap
+
+    def step(key, state, batch_items, bcount):
+        return simple.ttbs_step(
+            key, state, batch_items, bcount, p=jnp.float32(p), q=jnp.float32(q)
+        )
+
+    return Sampler(
+        scheme="ttbs",
+        init=lambda proto: simple.init(proto, cap),
+        step=step,
+        extract=_buffer_extract,
+        hyper={"n": n, "lam": lam, "batch_size": batch_size, "cap": cap,
+               "p": p, "q": q},
+    )
+
+
+@register("btbs")
+def _make_btbs(*, lam: float, cap: int) -> Sampler:
+    """B-TBS (paper Alg. 4): Bernoulli TBS -- T-TBS with q = 1."""
+    p = math.exp(-lam)
+
+    def step(key, state, batch_items, bcount):
+        return simple.btbs_step(key, state, batch_items, bcount, p=jnp.float32(p))
+
+    return Sampler(
+        scheme="btbs",
+        init=lambda proto: simple.init(proto, cap),
+        step=step,
+        extract=_buffer_extract,
+        hyper={"lam": lam, "cap": cap, "p": p},
+    )
+
+
+@register("brs")
+def _make_brs(*, n: int) -> Sampler:
+    """B-RS (paper Alg. 5): batched uniform reservoir -- the "Unif" baseline."""
+
+    def step(key, state, batch_items, bcount):
+        return simple.brs_step(key, state, batch_items, bcount, n=n)
+
+    return Sampler(
+        scheme="brs",
+        init=lambda proto: simple.init(proto, n),
+        step=step,
+        extract=_buffer_extract,
+        hyper={"n": n},
+    )
+
+
+@register("sw")
+def _make_sw(*, n: int) -> Sampler:
+    """SW: sliding window over the last n items (paper baseline)."""
+
+    def step(key, state, batch_items, bcount):
+        return simple.sw_step(key, state, batch_items, bcount, n=n)
+
+    return Sampler(
+        scheme="sw",
+        init=lambda proto: simple.init(proto, n),
+        step=step,
+        extract=_buffer_extract,
+        hyper={"n": n},
+    )
+
+
+# ---------------------------------------------------------------------------
+# distributed schemes (per-shard closures; call under jax.shard_map)
+# ---------------------------------------------------------------------------
+@register("dttbs")
+def _make_dttbs(*, n: int, lam: float, batch_size: float, cap: int | None = None) -> Sampler:
+    """D-T-TBS (paper Sec. 5.1): embarrassingly parallel per-shard T-TBS.
+
+    ``n``/``batch_size`` are PER-SHARD targets; ``step`` folds the shard index
+    into the key, so passing the same key on every shard is correct.
+    """
+    p, q = _ttbs_rates(n, lam, batch_size)
+    cap = 4 * n if cap is None else cap
+
+    def step(key, state, batch_items, bcount):
+        return distributed.dttbs_shard_step(
+            key, state, batch_items, bcount, p=jnp.float32(p), q=jnp.float32(q)
+        )
+
+    return Sampler(
+        scheme="dttbs",
+        init=lambda proto: simple.init(proto, cap),
+        step=step,
+        extract=_buffer_extract,
+        hyper={"n": n, "lam": lam, "batch_size": batch_size, "cap": cap,
+               "p": p, "q": q},
+        distributed=True,
+    )
+
+
+@register("drtbs")
+def _make_drtbs(*, n: int, lam: float, cap_s: int) -> Sampler:
+    """D-R-TBS (paper Sec. 5.2-5.3): co-partitioned reservoir, distributed
+    decisions. ``n`` is the GLOBAL bound, ``cap_s`` the per-shard capacity.
+
+    ``extract`` masks this shard's full items; the (at most one, replicated)
+    partial item stays in ``state.partial_item`` and is counted in ``size`` on
+    shard 0 only, mirroring :func:`repro.core.distributed.drtbs_realize_shard`.
+    """
+
+    def step(key, state, batch_items, bcount):
+        return distributed.drtbs_shard_step(
+            key, state, batch_items, bcount, n=n, lam=lam
+        )
+
+    def extract(key, state):
+        mask, size, _ = distributed.drtbs_realize_shard(key, state)
+        return SampleView(items=state.items, mask=mask, size=size)
+
+    return Sampler(
+        scheme="drtbs",
+        init=lambda proto: distributed.init_shard(proto, cap_s),
+        step=step,
+        extract=extract,
+        hyper={"n": n, "lam": lam, "cap_s": cap_s},
+        distributed=True,
+    )

@@ -33,7 +33,7 @@ from . import rng
 class BufferState:
     items: Any              # pytree, leaves [cap, ...]
     count: jax.Array        # int32 valid prefix
-    total_weight: jax.Array  # float32 (B-RS: item count W; others: unused 0)
+    total_weight: jax.Array  # float32 W_t (B-RS/SW: item count; T/B-TBS: decayed weight)
     overflow: jax.Array     # int32 cumulative dropped-by-capacity inserts
 
 
@@ -93,10 +93,13 @@ def ttbs_step(
     k = rng.binomial(k_acc, bcount, q)
     picks = rng.prefix_permutation(k_pick, bcap, bcount)
     items, new_count, dropped = _append(items, m, batch_items, picks, k)
+    # bookkeeping only (never read by the algorithm): the paper's total weight
+    # W_t = sum_j B_j p^{t-j}, so drivers can log W for every scheme
+    new_w = p * state.total_weight + jnp.asarray(bcount, jnp.float32)
     return BufferState(
         items=items,
         count=new_count,
-        total_weight=state.total_weight,
+        total_weight=new_w,
         overflow=state.overflow + dropped,
     )
 

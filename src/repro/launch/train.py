@@ -1,41 +1,61 @@
 """Online model management driver (the paper's loop, lifted to LMs):
 
-  stream -> R-TBS reservoir update -> (drift-triggered | periodic) retraining
-  on the current time-biased sample -> prequential evaluation -> checkpoint.
+  stream -> time-biased sample update -> (drift-triggered | periodic)
+  retraining on the current sample -> prequential evaluation -> checkpoint.
 
-Runs any `--arch` (reduced `--preset smoke` configs on CPU; full configs are
-for real pods). Fault tolerance: `--resume` restarts bit-exactly from the
-newest checkpoint (params, optimizer, reservoir, stream position).
+The sampler is any scheme from the unified registry (``--scheme rtbs|sw|brs|
+btbs|ttbs``, see :mod:`repro.core.api`); retraining runs through the
+:mod:`repro.manage` SGD adapter, so the reservoir update and the whole
+retrain inner loop are compiled programs. Runs any `--arch` (reduced
+`--preset smoke` configs on CPU; full configs are for real pods). Fault
+tolerance: `--resume` restarts bit-exactly from the newest checkpoint
+(params, optimizer, reservoir, stream position).
 
 Example:
   PYTHONPATH=src python -m repro.launch.train --arch stablelm_12b \
-      --preset smoke --ticks 30 --retrain-every 5
+      --preset smoke --ticks 30 --retrain-every 5 --scheme rtbs
 """
 from __future__ import annotations
 
 import argparse
-import dataclasses
-import json
-import time
+import math
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro import config as C
 from repro.checkpoint import AsyncCheckpointer, latest_step, restore_checkpoint
-from repro.core import latent as lt
-from repro.core import rtbs
+from repro.core.api import available_schemes, make_sampler
 from repro.data.streams import TokenDriftStream, mode_schedule
+from repro.manage import make_sgd_adapter
 from repro.models import zoo
 from repro.optim import AdamWConfig, adamw_init
 from repro.train.steps import make_train_step
+
+
+def build_sampler(scheme: str, *, n: int, lam: float, batch_per_tick: int):
+    """Map the driver's knobs onto each scheme's hyperparameters."""
+    if scheme == "rtbs":
+        return make_sampler("rtbs", n=n, lam=lam)
+    if scheme in ("sw", "brs"):
+        return make_sampler(scheme, n=n)
+    if scheme == "btbs":
+        # B-TBS has NO size control (paper Alg. 4): steady-state E|S| is
+        # b/(1-e^-lam), not --reservoir. Provision 3x that so the capacity
+        # bound never silently distorts the time bias.
+        steady = batch_per_tick / max(1.0 - math.exp(-lam), 1e-6)
+        return make_sampler("btbs", lam=lam, cap=max(n, int(3 * steady) + 1))
+    if scheme == "ttbs":
+        return make_sampler("ttbs", n=n, lam=lam, batch_size=batch_per_tick)
+    raise ValueError(f"unsupported scheme {scheme!r}; see {available_schemes()}")
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="stablelm_12b")
     ap.add_argument("--preset", default="smoke", choices=["smoke", "full"])
+    ap.add_argument("--scheme", default="rtbs",
+                    choices=["rtbs", "sw", "brs", "btbs", "ttbs"])
     ap.add_argument("--ticks", type=int, default=30)
     ap.add_argument("--batch-per-tick", type=int, default=32)
     ap.add_argument("--reservoir", type=int, default=256)
@@ -58,21 +78,29 @@ def main(argv=None):
     stream = TokenDriftStream(seed=args.seed, vocab=cfg.vocab_size,
                               seq_len=args.seq_len)
 
-    params = api.init_params(jax.random.key(args.seed))
-    opt_state = adamw_init(params)
     # fixed schedule horizon: must NOT depend on --ticks, or an interrupted
     # run would train under a different LR curve than the run it resumes
-    train_step = jax.jit(
-        make_train_step(
+    adapter = make_sgd_adapter(
+        init_params=lambda: api.init_params(jax.random.key(args.seed)),
+        train_step=make_train_step(
             api, AdamWConfig(lr=args.lr), microbatches=1,
             warmup=2, total_steps=4000,
-        )
+        ),
+        init_opt_state=adamw_init,
+        loss=api.loss,
+        batch_field="tokens",
+        train_batch=args.train_batch,
+        retrain_steps=args.retrain_steps,
+        name=args.arch,
     )
-    loss_fn = jax.jit(api.loss)
+    fit = jax.jit(adapter.fit)
+    eval_fn = jax.jit(adapter.evaluate)
 
-    # reservoir of token sequences
+    sampler = build_sampler(args.scheme, n=args.reservoir, lam=args.lam,
+                            batch_per_tick=args.batch_per_tick)
     proto = jax.ShapeDtypeStruct((args.seq_len,), jnp.int32)
-    st = rtbs.init(proto, args.reservoir)
+    st = sampler.init(proto)
+    model_state = adapter.init()
     start_tick = 0
 
     ckpt = AsyncCheckpointer(args.ckpt_dir) if args.ckpt_dir else None
@@ -80,11 +108,10 @@ def main(argv=None):
         last = latest_step(args.ckpt_dir)
         if last is not None:
             tree = restore_checkpoint(
-                args.ckpt_dir, last, (params, opt_state, st, 0)
+                args.ckpt_dir, last, (model_state, st, 0)
             )
-            params, opt_state, st, start_tick = tree
-            params = jax.tree_util.tree_map(jnp.asarray, params)
-            opt_state = jax.tree_util.tree_map(jnp.asarray, opt_state)
+            model_state, st, start_tick = tree
+            model_state = jax.tree_util.tree_map(jnp.asarray, model_state)
             st = jax.tree_util.tree_map(jnp.asarray, st)
             start_tick = int(start_tick)
             print(f"[train] resumed from step {last} (tick {start_tick})")
@@ -92,46 +119,42 @@ def main(argv=None):
     log = []
     for t in range(start_tick, args.ticks):
         mode = 0 if args.drift == "none" else mode_schedule(args.drift, t)
-        batch_np = stream.batch(t, args.batch_per_tick, mode)
-        batch = jnp.asarray(batch_np)
+        batch = jnp.asarray(stream.batch(t, args.batch_per_tick, mode))
 
         # prequential eval BEFORE the model sees this data
-        eval_loss = float(loss_fn(params, {"tokens": batch}))
+        eval_loss = float(eval_fn(model_state, batch, args.batch_per_tick))
 
-        # reservoir update (the paper's technique)
+        # sample update (the paper's technique)
         key_t = jax.random.fold_in(jax.random.key(args.seed + 1), t)
-        st = rtbs.step(key_t, st, batch, jnp.int32(args.batch_per_tick),
-                       n=args.reservoir, lam=args.lam)
+        st = sampler.step(key_t, st, batch, jnp.int32(args.batch_per_tick))
+
+        # ONE realization per tick: the logged |S| is the sample fit trains on
+        k_ex, k_fit = jax.random.split(
+            jax.random.fold_in(jax.random.key(args.seed + 2), t)
+        )
+        view = sampler.extract(k_ex, st)
+        size = int(view.size)
 
         # periodic retraining on the realized time-biased sample
         train_loss = float("nan")
-        if (t + 1) % args.retrain_every == 0:
-            mask, size = rtbs.realize(
-                jax.random.fold_in(jax.random.key(args.seed + 2), t), st
+        if (t + 1) % args.retrain_every == 0 and size >= args.train_batch:
+            model_state = fit(k_fit, model_state, view)
+            train_loss = float(
+                eval_fn(model_state, batch, args.batch_per_tick)
             )
-            items = st.lat.items
-            size_i = int(size)
-            if size_i >= args.train_batch:
-                idx_pool = np.where(np.asarray(mask))[0]
-                rs = np.random.RandomState(t)
-                for it in range(args.retrain_steps):
-                    sel = rs.choice(idx_pool, size=args.train_batch, replace=True)
-                    mb = jnp.asarray(np.asarray(items)[sel])
-                    params, opt_state, metrics = train_step(
-                        params, opt_state, {"tokens": mb}
-                    )
-                train_loss = float(metrics["loss"])
 
+        # every scheme's state carries W_t (decayed weight for rtbs/ttbs/btbs,
+        # item count for brs/sw)
+        total_w = float(st.total_weight)
         log.append({"tick": t, "mode": mode, "eval_loss": eval_loss,
-                    "train_loss": train_loss,
-                    "sample_weight": float(st.lat.weight),
-                    "total_weight": float(st.total_weight)})
+                    "train_loss": train_loss, "sample_size": size,
+                    "total_weight": total_w})
         print(f"[train] tick={t:4d} mode={mode} eval={eval_loss:7.4f} "
-              f"train={train_loss:7.4f} C={float(st.lat.weight):8.2f}",
+              f"train={train_loss:7.4f} |S|={size:5d} W={total_w:8.2f}",
               flush=True)
 
         if ckpt and (t + 1) % args.ckpt_every == 0:
-            ckpt.save(t + 1, (params, opt_state, st, t + 1))
+            ckpt.save(t + 1, (model_state, st, t + 1))
     if ckpt:
         ckpt.wait()
     return log

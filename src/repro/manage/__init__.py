@@ -1,0 +1,23 @@
+"""repro.manage -- the paper's online model-management loop as a subsystem.
+
+Wires :mod:`repro.data.streams` -> a :class:`repro.core.api.Sampler` ->
+periodic retraining -> prequential eval in one compiled ``lax.scan``
+(:mod:`repro.manage.loop`), with model adapters for the paper's applications
+and for gradient-trained zoo models (:mod:`repro.manage.models`).
+See DESIGN.md Sec. 8 for the architecture.
+"""
+from .loop import (  # noqa: F401
+    make_manage_step,
+    make_run_farm,
+    make_run_loop,
+    materialize_stream,
+    run_farm,
+    run_loop,
+    tick_keys,
+)
+from .models import (  # noqa: F401
+    ModelAdapter,
+    available_models,
+    make_model,
+    make_sgd_adapter,
+)

@@ -1,0 +1,198 @@
+"""The paper's online model-management loop, fused into one compiled program.
+
+This is the connective tissue the headline claim needs (paper Sec. 1, Fig. 2):
+maintain a time-biased sample over the stream, periodically retrain a model on
+the realized sample, and evaluate/serve the freshest model -- here as a single
+``lax.scan`` over stream batches so the whole loop compiles once and never
+leaves the device (DESIGN.md Sec. 8):
+
+    for each tick t (scanned):
+      1. metric_t = model.evaluate(params, B_t)     # prequential: eval BEFORE
+      2. state    = sampler.step(key_t, state, B_t) # the model/sampler see B_t
+      3. if (t+1) % retrain_every == 0:
+           params = model.fit(key_t', params, sampler.extract(key_t'', state))
+
+Entry points:
+  * :func:`make_run_loop`  -- compile the loop once for a (sampler, model,
+                              retrain cadence); reuse across streams/seeds.
+  * :func:`run_loop`       -- convenience one-shot wrapper.
+  * :func:`make_run_farm` / :func:`run_farm` -- ``vmap`` the whole loop over
+    Monte-Carlo trials (the paper's Fig. 12/13 robustness protocol: many
+    sampler realizations over one stream, metric quantiles over trials).
+  * :func:`materialize_stream` -- stack a host-side generator from
+    :mod:`repro.data.streams` into the fixed-shape [T, bcap, ...] arrays the
+    scan consumes.
+
+Key discipline (bit-exact replays, and what tests assert): tick t uses
+``fold_in(key, t)`` split into (step, extract, fit) subkeys, so a fused run,
+an unfused per-tick driver, and a checkpoint-resumed run all see identical
+randomness.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.api import Sampler
+from repro.manage.models import ModelAdapter
+
+
+def tick_keys(key: jax.Array, t) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """The loop's per-tick (step, extract, fit) keys -- public so unfused
+    drivers and tests can reproduce the fused loop exactly."""
+    return tuple(jax.random.split(jax.random.fold_in(key, t), 3))
+
+
+def item_proto(batches: Any) -> Any:
+    """ONE-item prototype from stacked stream arrays (leaves [T, bcap, ...])."""
+    return jax.tree_util.tree_map(
+        lambda a: jax.ShapeDtypeStruct(a.shape[2:], a.dtype), batches
+    )
+
+
+def _check_local(sampler: Sampler) -> None:
+    if sampler.distributed:
+        from repro.core.distributed import AXIS
+
+        raise ValueError(
+            f"sampler {sampler.scheme!r} is a per-shard scheme: its step/extract "
+            f"must run under jax.shard_map over the {AXIS!r} axis and cannot "
+            "drive the single-host manage loop directly"
+        )
+
+
+def make_manage_step(sampler: Sampler, model: ModelAdapter, *,
+                     retrain_every: int = 1) -> Callable:
+    """One tick of the loop: ``(key, t, state, params, batch, bcount) ->
+    (state, params, metrics)``. Composable: this exact function is what
+    :func:`make_run_loop` scans, so driving it tick-by-tick (checkpointing,
+    serving, human-in-the-loop) stays bit-identical to the fused run."""
+    _check_local(sampler)
+
+    def step(key, t, state, params, batch_items, bcount):
+        k_step, k_extract, k_fit = tick_keys(key, t)
+        metric = model.evaluate(params, batch_items, bcount)
+        state = sampler.step(k_step, state, batch_items, bcount)
+        view = sampler.extract(k_extract, state)
+
+        do_fit = (t + 1) % retrain_every == 0
+        params = jax.lax.cond(
+            do_fit,
+            lambda: model.fit(k_fit, params, view),
+            lambda: params,
+        )
+        metrics = {"metric": metric, "size": view.size}
+        return state, params, metrics
+
+    return step
+
+
+def make_run_loop(sampler: Sampler, model: ModelAdapter, *,
+                  retrain_every: int = 1) -> Callable:
+    """Compile the full-stream loop once.
+
+    Returns ``run(key, batches, bcounts) -> (state, params, trace)`` where
+    ``batches`` leaves are [T, bcap, ...], ``bcounts`` is [T] int32, and
+    ``trace`` holds per-tick {"metric" f32[T], "size" i32[T]}. The whole
+    stream is consumed by ONE jitted ``lax.scan`` -- no per-tick dispatch.
+    """
+    tick = make_manage_step(sampler, model, retrain_every=retrain_every)
+
+    @jax.jit
+    def run(key, batches, bcounts):
+        state0 = sampler.init(item_proto(batches))
+        params0 = model.init()
+        T = bcounts.shape[0]
+
+        def body(carry, inp):
+            state, params = carry
+            t, batch_items, bcount = inp
+            state, params, metrics = tick(key, t, state, params,
+                                          batch_items, bcount)
+            return (state, params), metrics
+
+        (state, params), trace = jax.lax.scan(
+            body, (state0, params0),
+            (jnp.arange(T, dtype=jnp.int32), batches, bcounts),
+        )
+        return state, params, trace
+
+    return run
+
+
+def run_loop(key: jax.Array, sampler: Sampler, model: ModelAdapter,
+             batches: Any, bcounts: jax.Array, *, retrain_every: int = 1):
+    """One-shot convenience wrapper over :func:`make_run_loop`."""
+    return make_run_loop(sampler, model, retrain_every=retrain_every)(
+        key, batches, bcounts
+    )
+
+
+def make_run_farm(sampler: Sampler, model: ModelAdapter, *,
+                  retrain_every: int = 1) -> Callable:
+    """Monte-Carlo farm: ``farm(key, trials, batches, bcounts) -> trace``.
+
+    ``vmap`` of the fused loop over ``trials`` independent sampler/model
+    randomness streams sharing one data stream; trace leaves gain a leading
+    [trials] axis. This is the Fig. 12/13 robustness protocol (mean + expected
+    shortfall over realizations) as one compiled program.
+    """
+    run = make_run_loop(sampler, model, retrain_every=retrain_every)
+
+    def farm(key, trials: int, batches, bcounts):
+        keys = jax.random.split(key, trials)
+        _, _, trace = jax.vmap(lambda k: run(k, batches, bcounts))(keys)
+        return trace
+
+    return farm
+
+
+def run_farm(key: jax.Array, trials: int, sampler: Sampler,
+             model: ModelAdapter, batches: Any, bcounts: jax.Array, *,
+             retrain_every: int = 1):
+    """One-shot convenience wrapper over :func:`make_run_farm`."""
+    return make_run_farm(sampler, model, retrain_every=retrain_every)(
+        key, trials, batches, bcounts
+    )
+
+
+def materialize_stream(stream: Any, T: int, *, batch_size: int | Callable,
+                       mode: int | Callable = 0, bcap: int | None = None,
+                       fields: tuple[str, ...] = ("x", "y")):
+    """Stack ``stream.batch(t, size, mode)`` for t in [0, T) into scan inputs.
+
+    ``batch_size`` / ``mode`` may be ints or ``t -> int`` schedules (compose
+    with :func:`repro.data.streams.batch_size_schedule` / ``mode_schedule``).
+    Generators returning tuples are zipped into a dict over ``fields``; a
+    single-array stream (e.g. token sequences) stays a bare array. Returns
+    ``(batches, bcounts)`` with leaves [T, bcap, ...] / [T] int32, batches
+    zero-padded up to ``bcap`` (default: the max tick size).
+    """
+    size_of = batch_size if callable(batch_size) else (lambda t: batch_size)
+    mode_of = mode if callable(mode) else (lambda t: mode)
+    sizes = [int(size_of(t)) for t in range(T)]
+    bcap = max(sizes) if bcap is None else bcap
+    if max(sizes) > bcap:
+        raise ValueError(f"batch size {max(sizes)} exceeds bcap={bcap}")
+
+    raw = [stream.batch(t, sizes[t], mode_of(t)) for t in range(T)]
+    as_dict = isinstance(raw[0], tuple)
+    if as_dict:
+        raw = [dict(zip(fields, r)) for r in raw]
+
+    def pad_stack(leaves):
+        out = np.zeros((T, bcap) + leaves[0].shape[1:], leaves[0].dtype)
+        for t, leaf in enumerate(leaves):
+            out[t, : leaf.shape[0]] = leaf
+        return jnp.asarray(out)
+
+    if as_dict:
+        batches = {
+            f: pad_stack([r[f] for r in raw]) for f in raw[0]
+        }
+    else:
+        batches = pad_stack(raw)
+    return batches, jnp.asarray(sizes, jnp.int32)

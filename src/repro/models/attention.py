@@ -8,7 +8,6 @@ validated against the same reference). Selected by cfg.attention_impl.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp

@@ -9,7 +9,7 @@ import jax.numpy as jnp
 
 from repro.config import ModelConfig, ShapeConfig
 
-from . import encdec, hybrid, layers as L, mamba_lm, transformer
+from . import encdec, hybrid, mamba_lm, transformer
 
 VLM_PATCHES = 256  # stubbed vision prefix length (qwen2-vl dynamic-res stub)
 

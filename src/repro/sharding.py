@@ -16,7 +16,6 @@ Head-sharding fallback chain per arch (q / kv decided together):
 from __future__ import annotations
 
 import dataclasses
-import re
 from typing import Any
 
 import jax

@@ -3,9 +3,6 @@ microbatching), prefill, decode. These are the programs the multi-pod dry-run
 lowers and the roofline analyses."""
 from __future__ import annotations
 
-import functools
-from typing import Any
-
 import jax
 import jax.numpy as jnp
 

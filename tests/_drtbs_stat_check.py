@@ -15,7 +15,6 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 
 import functools
 import math
-import sys
 
 import jax
 import jax.numpy as jnp
@@ -23,7 +22,6 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.core import distributed as dist
-from repro.core import latent as lt
 
 S = 8          # shards
 CAP_S = 24     # per-shard reservoir capacity
@@ -83,9 +81,9 @@ def main():
         return items, nfull[:, None], partial, weight, tweight, oflow[:, None]
 
     smapped = jax.jit(
-        jax.shard_map(
+        dist.shard_map(
             lambda *a: fix_dims_post(shard_fn(*a)),
-            mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=False,
+            mesh=mesh, in_specs=in_specs, out_specs=out_specs,
         )
     )
 

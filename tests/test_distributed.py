@@ -9,8 +9,6 @@ import pathlib
 import subprocess
 import sys
 
-import pytest
-
 HERE = pathlib.Path(__file__).parent
 SRC = str(HERE.parent / "src")
 

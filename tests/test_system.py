@@ -2,7 +2,6 @@
 (bit-exact resume), straggler-tolerant pipeline, elastic reservoir resharding,
 simple-ML models on the paper's streams."""
 import numpy as np
-import pytest
 
 
 def test_driver_runs_and_adapts(tmp_path):
