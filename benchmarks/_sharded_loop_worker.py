@@ -1,0 +1,100 @@
+"""Subprocess worker for the sharded manage-loop benchmark.
+
+Usage: python -m benchmarks._sharded_loop_worker <shards> <mode>
+Prints: ``<mode>,<us_per_tick>``.
+
+Modes (same sampler/model/stream/keys, so the traces are identical -- the
+bit-equality is unit-tested in tests/test_sharded_loop.py):
+  fused    -- :func:`repro.manage.make_sharded_run_loop`: the whole stream as
+              one jitted scan with shard-resident reservoir state.
+  per_tick -- :func:`repro.manage.make_sharded_manage_step`: one shard_map
+              dispatch per tick, state round-tripped through its replicated
+              gather_tree snapshot (the pre-fusion idiom).
+"""
+import os
+import sys
+
+SHARDS = int(sys.argv[1])
+MODE = sys.argv[2]
+
+os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={SHARDS}"
+
+import time  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.core.api import make_sampler  # noqa: E402
+from repro.data.streams import LinRegStream  # noqa: E402
+from repro.launch.mesh import make_data_mesh  # noqa: E402
+from repro.manage import (  # noqa: E402
+    init_sharded_state,
+    make_model,
+    make_sharded_manage_step,
+    make_sharded_run_loop,
+    materialize_stream,
+    shard_stream,
+)
+
+T = 64
+B_PER_SHARD = 64           # global batch scales with the mesh
+N = 256
+LAM = 0.07
+RETRAIN_EVERY = 4
+
+
+def main():
+    sampler = make_sampler("drtbs", n=N, lam=LAM,
+                           cap_s=N + B_PER_SHARD)
+    model = make_model("linreg", dim=2)
+    batches, bcounts = materialize_stream(
+        LinRegStream(seed=0), T, batch_size=B_PER_SHARD * SHARDS
+    )
+    batches, bcounts = shard_stream(batches, bcounts, SHARDS)
+    mesh = make_data_mesh(SHARDS)
+    key = jax.random.key(0)
+
+    if MODE == "fused":
+        run = make_sharded_run_loop(sampler, model, mesh,
+                                    retrain_every=RETRAIN_EVERY)
+
+        def once():
+            return run(key, batches, bcounts)
+
+    elif MODE == "per_tick":
+        tick = make_sharded_manage_step(sampler, model, mesh,
+                                        retrain_every=RETRAIN_EVERY)
+        proto = jax.tree_util.tree_map(
+            lambda a: jax.ShapeDtypeStruct(a.shape[2:], a.dtype), batches
+        )
+        ticks = [
+            (jnp.int32(t),
+             jax.tree_util.tree_map(lambda a, t=t: a[t], batches),
+             bcounts[t])
+            for t in range(T)
+        ]
+
+        def once():
+            state = init_sharded_state(sampler, SHARDS, proto)
+            params = model.init()
+            for t, bt, ct in ticks:
+                state, params, m = tick(key, t, state, params, bt, ct)
+            return state, params, m
+
+    else:
+        raise SystemExit(f"unknown mode {MODE!r}")
+
+    out = once()  # compile + warm
+    jax.block_until_ready(out)
+    ts = []
+    for _ in range(5):
+        t0 = time.perf_counter()
+        out = once()
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    print(f"{MODE},{np.median(ts) / T * 1e6:.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -7,7 +7,12 @@ share one CPU), so it reflects the paper's *work/traffic* ordering rather
 than real network latency -- EXPERIMENTS.md notes the caveat.
 
 Fig. 8 (scale-out): CP+Dist per-batch time vs shard count at fixed global
-batch. Fig. 9 (scale-up): per-batch time vs per-shard batch size."""
+batch. Fig. 9 (scale-up): per-batch time vs per-shard batch size.
+
+``fig8_fusedloop_*`` is the scale-out of the FULL fused sharded manage loop
+(stream -> sample -> retrain -> eval via repro.manage.make_sharded_run_loop)
+rather than the bare sampler step -- the Sec. 5 algorithms driving the
+Sec. 6 experiment harness in one program (protocol in EXPERIMENTS.md)."""
 from __future__ import annotations
 
 import os
@@ -51,6 +56,13 @@ def run():
         us = _worker(8, bps, "cp_dist")
         rows.append((f"fig9_scaleup_b{bps}", us,
                      {"shards": 8, "batch/shard": bps}))
+    # Fig. 8 companion: the whole fused manage loop scaling out
+    from .manage_loop import _sharded_worker
+
+    for shards in (1, 2, 4, 8):
+        us = _sharded_worker(shards, "fused")
+        rows.append((f"fig8_fusedloop_{shards}w", us,
+                     {"shards": shards, "us_per_tick": round(us, 1)}))
     return rows
 
 

@@ -1,4 +1,4 @@
-"""Fused vs. unfused online model-management loop (DESIGN.md Sec. 8).
+"""Fused vs. unfused online model-management loop (DESIGN.md Secs. 8, 10).
 
 Measures ticks/sec of the paper's stream -> sample -> retrain -> eval loop:
 
@@ -10,10 +10,25 @@ Measures ticks/sec of the paper's stream -> sample -> retrain -> eval loop:
   * ``farm32``  -- the fused loop ``vmap``-ed over 32 Monte-Carlo trials
     (Fig. 12/13 robustness protocol); throughput counts trials x ticks.
 
-Same keys, same trace -- the fused/unfused equivalence is asserted before
-timing (and unit-tested in tests/test_api.py).
+plus the D-R-TBS sharded loop at 1/2/4/8 virtual host devices (subprocess
+per device count, see benchmarks/_sharded_loop_worker.py):
+
+  * ``sharded_fused_Sw``   -- :func:`repro.manage.make_sharded_run_loop`:
+    the whole stream as one jitted scan under shard_map (shard-resident
+    reservoir state).
+  * ``sharded_pertick_Sw`` -- :func:`repro.manage.make_sharded_manage_step`:
+    one shard_map dispatch per tick (state snapshot round-trips every tick).
+
+Same keys, same trace -- the fused/unfused equivalences are asserted before
+timing (and unit-tested in tests/test_api.py / tests/test_sharded_loop.py).
+EXPERIMENTS.md (sharded-loop protocol) documents the host-mesh caveat.
 """
 from __future__ import annotations
+
+import os
+import pathlib
+import subprocess
+import sys
 
 import jax
 import numpy as np
@@ -36,6 +51,28 @@ B = 100
 N = 400
 LAM = 0.07
 TRIALS = 32
+
+HERE = pathlib.Path(__file__).parent
+
+
+def _sharded_worker(shards: int, mode: str, timeout=600) -> float:
+    """us/tick of the sharded loop in a subprocess with ``shards`` forced
+    host devices (the device count is locked at jax init, so each point
+    needs its own process -- same pattern as fig789)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (
+        str(HERE.parent / "src") + os.pathsep + str(HERE.parent)
+        + os.pathsep + env.get("PYTHONPATH", "")
+    )
+    env.pop("XLA_FLAGS", None)  # the worker sets its own device count
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks._sharded_loop_worker",
+         str(shards), mode],
+        capture_output=True, text=True, timeout=timeout, env=env,
+        cwd=str(HERE.parent),
+    )
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    return float(proc.stdout.strip().splitlines()[-1].split(",")[1])
 
 
 def run():
@@ -83,6 +120,18 @@ def run():
     rows.append(("manage_loop_farm32", t_farm / work * 1e6,
                  {"trial_ticks_per_s": round(work / t_farm, 1),
                   "trials": TRIALS}))
+
+    # D-R-TBS sharded loop: fused scan vs per-tick shard_map dispatch
+    for shards in (1, 2, 4, 8):
+        us_tick = _sharded_worker(shards, "per_tick")
+        us_fused = _sharded_worker(shards, "fused")
+        rows.append((f"sharded_pertick_{shards}w", us_tick,
+                     {"shards": shards,
+                      "ticks_per_s": round(1e6 / us_tick, 1)}))
+        rows.append((f"sharded_fused_{shards}w", us_fused,
+                     {"shards": shards,
+                      "ticks_per_s": round(1e6 / us_fused, 1),
+                      "speedup_vs_pertick": round(us_tick / us_fused, 2)}))
     return rows
 
 

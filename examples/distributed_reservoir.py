@@ -1,5 +1,9 @@
 """D-R-TBS on a multi-device mesh: the co-partitioned reservoir with
-distributed decisions (paper Sec. 5.3, Fig. 6(b)) running over 8 host devices.
+distributed decisions (paper Sec. 5.3, Fig. 6(b)) driving the paper's FULL
+model-management loop over 8 host devices -- stream -> per-shard sample
+update -> periodic retrain on the realized global sample -> prequential eval,
+fused into one compiled program by :func:`repro.manage.make_sharded_run_loop`
+(DESIGN.md Sec. 10).
 
 This script re-execs itself with XLA_FLAGS so the devices exist before jax
 initializes (the same pattern the production launcher uses per-pod).
@@ -13,53 +17,43 @@ if "XLA_FLAGS" not in os.environ:
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     os.execv(sys.executable, [sys.executable] + sys.argv)
 
-import functools  # noqa: E402
-
 import jax  # noqa: E402
-import jax.numpy as jnp  # noqa: E402
-from jax.sharding import PartitionSpec as P  # noqa: E402
+import numpy as np  # noqa: E402
 
-from repro.core import distributed as dist  # noqa: E402
-from repro.launch.mesh import make_mesh  # noqa: E402
-
-S, CAP_S, BPS, N, LAM = 8, 64, 16, 100, 0.1
-
-mesh = make_mesh((S,), (dist.AXIS,))
-step = functools.partial(dist.drtbs_shard_step, n=N, lam=LAM)
-
-
-def shard_fn(key, items, nfull, partial, weight, tweight, oflow, bi, bc):
-    st = dist.DRTBSShard(items=items, nfull=nfull[0], partial_item=partial,
-                         weight=weight, total_weight=tweight, overflow=oflow[0])
-    st = step(key, st, bi, bc[0])
-    return (st.items, st.nfull[None], st.partial_item, st.weight,
-            st.total_weight, st.overflow[None])
-
-
-smapped = jax.jit(dist.shard_map(
-    shard_fn, mesh=mesh,
-    in_specs=(P(), P(dist.AXIS), P(dist.AXIS), P(), P(), P(), P(dist.AXIS),
-              P(dist.AXIS), P(dist.AXIS)),
-    out_specs=(P(dist.AXIS), P(dist.AXIS), P(), P(), P(), P(dist.AXIS)),
-))
-
-state = (
-    jnp.zeros((S * CAP_S,), jnp.int32),   # items (ids)
-    jnp.zeros((S,), jnp.int32),           # per-shard full counts
-    jnp.int32(0),                         # replicated partial item
-    jnp.float32(0.0),                     # C
-    jnp.float32(0.0),                     # W
-    jnp.zeros((S,), jnp.int32),           # overflow
+from repro.core.api import make_sampler  # noqa: E402
+from repro.data.streams import LinRegStream, mode_schedule  # noqa: E402
+from repro.launch.mesh import make_data_mesh  # noqa: E402
+from repro.manage import (  # noqa: E402
+    make_model,
+    make_sharded_run_loop,
+    materialize_stream,
+    shard_stream,
 )
 
-print(f"mesh: {S} shards; global reservoir n={N}; uneven per-shard batches")
-for t in range(12):
-    bc = jnp.asarray([(t + s) % 3 * BPS // 2 for s in range(S)], jnp.int32)
-    bi = jnp.arange(S * BPS, dtype=jnp.int32) + 10000 * t
-    key = jax.random.fold_in(jax.random.key(0), t)
-    state = smapped(key, *state, bi, bc)
-    items, nfull, partial, weight, tweight, oflow = state
-    print(f"  t={t:2d} |B|={int(bc.sum()):4d}  C={float(weight):6.2f}  "
-          f"W={float(tweight):8.2f}  shard fulls={[int(x) for x in nfull]}")
-assert int(oflow.sum()) == 0
-print("bounded, co-partitioned, zero payload shuffling -- done.")
+S, T, B, N, LAM = 8, 24, 64, 100, 0.1
+
+# one global stream, co-partitioned: shard s owns slots [s*bcap_s, (s+1)*bcap_s)
+batches, bcounts = materialize_stream(
+    LinRegStream(seed=0), T, batch_size=B,
+    mode=lambda t: mode_schedule("single", t),
+)
+batches, bcounts = shard_stream(batches, bcounts, S)
+
+mesh = make_data_mesh(S)
+sampler = make_sampler("drtbs", n=N, lam=LAM, cap_s=N + B)
+model = make_model("linreg", dim=2)
+run = make_sharded_run_loop(sampler, model, mesh, retrain_every=2)
+
+print(f"mesh: {S} shards; global reservoir n={N}; fused scan over {T} ticks")
+state, params, trace = run(jax.random.key(0), batches, bcounts)
+
+metric = np.asarray(trace["metric"])
+size = np.asarray(trace["size"])
+for t in range(T):
+    print(f"  t={t:2d} mse={metric[t]:7.3f}  |S|={int(size[t]):3d}")
+print(f"final shard fulls={[int(x) for x in np.asarray(state.nfull)]}  "
+      f"C={float(np.asarray(state.weight)[0]):.2f}  "
+      f"W={float(np.asarray(state.total_weight)[0]):.2f}")
+assert int(np.asarray(state.overflow).sum()) == 0
+assert (size <= N).all()
+print("bounded, co-partitioned, one fused program -- done.")

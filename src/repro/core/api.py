@@ -43,6 +43,11 @@ Conventions shared by every scheme:
   * ``extract(key, state)`` realizes the current sample as a
     :class:`SampleView`; for deterministic-membership schemes the key is
     unused. ``view.items`` rows where ``view.mask`` is False are garbage.
+    Every scheme guarantees ``view.mask.sum() == view.size``: an item counted
+    in the size is materialized in the view (for D-R-TBS the fractional item
+    occupies a reserved extra slot).
+  * ``size(key, state)`` is the payload-free fast path: the ``view.size``
+    that ``extract`` would report for the same key.
 """
 from __future__ import annotations
 
@@ -70,21 +75,37 @@ class SampleView:
     size: jax.Array
 
 
-@dataclasses.dataclass(frozen=True)
+@dataclasses.dataclass(frozen=True, eq=False)
 class Sampler:
     """A sampling scheme bound to its hyperparameters.
 
     Not a pytree: the *state* returned by ``init`` is the pytree that flows
     through ``jit``/``scan``; the Sampler itself is a static bundle of
-    closures (close over it freely inside jitted functions).
+    closures (close over it freely inside jitted functions). ``eq=False``
+    keeps identity hashing, so Samplers work as cache keys -- the manage loop
+    memoizes its compiled programs on them.
+
+    ``size(key, state)`` is the cheap size-only realization: it returns
+    exactly the ``view.size`` that ``extract`` would report for the same key,
+    WITHOUT permuting or gathering any item payloads. The manage loop logs it
+    on every tick while ``extract`` runs only on retrain ticks.
+
+    Distributed (per-shard) schemes additionally provide
+    ``extract_global(key, state) -> SampleView`` / ``size_global(key, state)``:
+    called under ``shard_map``, they assemble the replicated GLOBAL sample
+    view (all-gathered shard prefixes + the reserved fractional-item slot) /
+    the global size. Local schemes leave them ``None``.
     """
 
     scheme: str
     init: Callable[[Any], Any]
     step: Callable[[jax.Array, Any, Any, jax.Array], Any]
     extract: Callable[[jax.Array, Any], SampleView]
+    size: Callable[[jax.Array, Any], jax.Array]
     hyper: Mapping[str, Any]
     distributed: bool = False
+    extract_global: Callable[[jax.Array, Any], SampleView] | None = None
+    size_global: Callable[[jax.Array, Any], jax.Array] | None = None
 
     def __repr__(self) -> str:  # keep hyper readable in logs/tracebacks
         hp = ", ".join(f"{k}={v}" for k, v in self.hyper.items())
@@ -137,6 +158,11 @@ def _buffer_extract(key: jax.Array, state: simple.BufferState) -> SampleView:
     return SampleView(items=state.items, mask=mask, size=size)
 
 
+def _buffer_size(key: jax.Array, state: simple.BufferState) -> jax.Array:
+    del key  # deterministic membership
+    return state.count
+
+
 # ---------------------------------------------------------------------------
 # local schemes
 # ---------------------------------------------------------------------------
@@ -151,11 +177,19 @@ def _make_rtbs(*, n: int, lam: float) -> Sampler:
         mask, size = rtbs.realize(key, state)
         return SampleView(items=state.lat.items, mask=mask, size=size)
 
+    def size(key, state):
+        # the size-only path of lt.realize: same key => same partial draw
+        from . import latent as lt
+
+        k, take, _ = lt.partial_draw(key, state.lat.weight)
+        return k + take.astype(jnp.int32)
+
     return Sampler(
         scheme="rtbs",
         init=lambda proto: rtbs.init(proto, n),
         step=step,
         extract=extract,
+        size=size,
         hyper={"n": n, "lam": lam},
     )
 
@@ -176,6 +210,7 @@ def _make_ttbs(*, n: int, lam: float, batch_size: float, cap: int | None = None)
         init=lambda proto: simple.init(proto, cap),
         step=step,
         extract=_buffer_extract,
+        size=_buffer_size,
         hyper={"n": n, "lam": lam, "batch_size": batch_size, "cap": cap,
                "p": p, "q": q},
     )
@@ -194,6 +229,7 @@ def _make_btbs(*, lam: float, cap: int) -> Sampler:
         init=lambda proto: simple.init(proto, cap),
         step=step,
         extract=_buffer_extract,
+        size=_buffer_size,
         hyper={"lam": lam, "cap": cap, "p": p},
     )
 
@@ -210,6 +246,7 @@ def _make_brs(*, n: int) -> Sampler:
         init=lambda proto: simple.init(proto, n),
         step=step,
         extract=_buffer_extract,
+        size=_buffer_size,
         hyper={"n": n},
     )
 
@@ -226,6 +263,7 @@ def _make_sw(*, n: int) -> Sampler:
         init=lambda proto: simple.init(proto, n),
         step=step,
         extract=_buffer_extract,
+        size=_buffer_size,
         hyper={"n": n},
     )
 
@@ -248,14 +286,26 @@ def _make_dttbs(*, n: int, lam: float, batch_size: float, cap: int | None = None
             key, state, batch_items, bcount, p=jnp.float32(p), q=jnp.float32(q)
         )
 
+    def extract_global(key, state):
+        del key  # deterministic membership
+        items, mask, size = distributed.buffer_realize_global(state)
+        return SampleView(items=items, mask=mask, size=size)
+
+    def size_global(key, state):
+        del key
+        return jax.lax.psum(state.count, distributed.AXIS)
+
     return Sampler(
         scheme="dttbs",
         init=lambda proto: simple.init(proto, cap),
         step=step,
         extract=_buffer_extract,
+        size=_buffer_size,
         hyper={"n": n, "lam": lam, "batch_size": batch_size, "cap": cap,
                "p": p, "q": q},
         distributed=True,
+        extract_global=extract_global,
+        size_global=size_global,
     )
 
 
@@ -264,9 +314,14 @@ def _make_drtbs(*, n: int, lam: float, cap_s: int) -> Sampler:
     """D-R-TBS (paper Sec. 5.2-5.3): co-partitioned reservoir, distributed
     decisions. ``n`` is the GLOBAL bound, ``cap_s`` the per-shard capacity.
 
-    ``extract`` masks this shard's full items; the (at most one, replicated)
-    partial item stays in ``state.partial_item`` and is counted in ``size`` on
-    shard 0 only, mirroring :func:`repro.core.distributed.drtbs_realize_shard`.
+    ``extract`` returns this shard's slice of the realized sample with item
+    leaves [cap_s + 1, ...]: the shard's full-item buffer plus ONE reserved
+    slot (index ``cap_s``) holding the replicated partial payload. The partial
+    is realized w.p. frac(C) on shard 0 only (mirroring
+    :func:`repro.core.distributed.drtbs_realize_shard`), and whenever it is
+    counted in ``size`` its payload is selected by ``mask`` -- so
+    ``mask.sum() == size`` holds per shard and globally. ``extract_global``
+    assembles the whole-mesh view the sharded manage loop fits models on.
     """
 
     def step(key, state, batch_items, bcount):
@@ -275,14 +330,31 @@ def _make_drtbs(*, n: int, lam: float, cap_s: int) -> Sampler:
         )
 
     def extract(key, state):
-        mask, size, _ = distributed.drtbs_realize_shard(key, state)
-        return SampleView(items=state.items, mask=mask, size=size)
+        mask, size, take_partial = distributed.drtbs_realize_shard(key, state)
+        items = jax.tree_util.tree_map(
+            lambda a, p: jnp.concatenate([a, p[None]], axis=0),
+            state.items,
+            state.partial_item,
+        )
+        mask = jnp.concatenate([mask, take_partial[None]])
+        return SampleView(items=items, mask=mask, size=size)
+
+    def size(key, state):
+        _, size, _ = distributed.drtbs_realize_shard(key, state)
+        return size
+
+    def extract_global(key, state):
+        items, mask, size = distributed.drtbs_realize_global(key, state)
+        return SampleView(items=items, mask=mask, size=size)
 
     return Sampler(
         scheme="drtbs",
         init=lambda proto: distributed.init_shard(proto, cap_s),
         step=step,
         extract=extract,
+        size=size,
         hyper={"n": n, "lam": lam, "cap_s": cap_s},
         distributed=True,
+        extract_global=extract_global,
+        size_global=distributed.drtbs_global_size,
     )

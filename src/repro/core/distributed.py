@@ -347,13 +347,76 @@ def drtbs_shard_step(
 
 def drtbs_realize_shard(key: jax.Array, st: DRTBSShard):
     """Realize S_t on this shard: (mask [cap_s], local size). The partial item is
-    included (on shard 0 only) w.p. frac(C), using the replicated key."""
+    included (on shard 0 only) w.p. frac(C), using the replicated key.
+
+    Callers that materialize the realized sample must also materialize the
+    partial payload whenever ``take_partial`` is True -- ``st.partial_item`` is
+    NOT covered by ``mask``/``st.items`` (it is a separate replicated payload).
+    The unified API does this by reserving slot ``cap_s``; see
+    :func:`repro.core.api._make_drtbs`."""
     me = jax.lax.axis_index(AXIS)
-    _, f = lt.floor_frac(st.weight)
-    take_partial = jax.random.bernoulli(key, f) & (f > 0) & (me == 0)
+    _, take, _ = lt.partial_draw(key, st.weight)
+    take_partial = take & (me == 0)
     cap_s = jax.tree_util.tree_leaves(st.items)[0].shape[0]
     mask = jnp.arange(cap_s) < st.nfull
     return mask, st.nfull + take_partial.astype(jnp.int32), take_partial
+
+
+def drtbs_realize_global(key: jax.Array, st: DRTBSShard):
+    """Assemble the realized GLOBAL sample, replicated on every shard.
+
+    Returns ``(items, mask, size)`` where item leaves are [S*cap_s + 1, ...]:
+    the all-gathered per-shard full-item buffers followed by ONE reserved slot
+    holding the replicated partial payload. Slot ``S*cap_s`` is selected w.p.
+    frac(C) with the replicated key, so -- unlike the bare per-shard realize --
+    the fractional item's payload is materialized whenever it is counted and
+    ``mask.sum() == size`` holds globally. One all_gather of the shard buffers
+    (the only time payloads cross shards: model fitting needs them anyway) plus
+    one psum of the counts."""
+    cap_s = jax.tree_util.tree_leaves(st.items)[0].shape[0]
+    _, take_partial, _ = lt.partial_draw(key, st.weight)
+    mask_s = jnp.arange(cap_s) < st.nfull
+    items = jax.tree_util.tree_map(
+        lambda a: jax.lax.all_gather(a, AXIS, tiled=True), st.items
+    )
+    mask = jax.lax.all_gather(mask_s, AXIS, tiled=True)
+    items = jax.tree_util.tree_map(
+        lambda g, p: jnp.concatenate([g, p[None]], axis=0), items, st.partial_item
+    )
+    mask = jnp.concatenate([mask, take_partial[None]])
+    size = jax.lax.psum(st.nfull, AXIS) + take_partial.astype(jnp.int32)
+    return items, mask, size
+
+
+def drtbs_global_size(key: jax.Array, st: DRTBSShard) -> jax.Array:
+    """|S_t| as :func:`drtbs_realize_global` would report it (same key => same
+    partial-item draw), without touching the item buffers: the cheap size-only
+    path the fused loop logs on non-retrain ticks."""
+    _, take_partial, _ = lt.partial_draw(key, st.weight)
+    return jax.lax.psum(st.nfull, AXIS) + take_partial.astype(jnp.int32)
+
+
+def buffer_realize_global(state):
+    """Global view of a per-shard :class:`repro.core.simple.BufferState` (the
+    D-T-TBS path): all-gathered buffers + prefix masks, psum'd size. Replicated
+    on every shard; deterministic membership, so no key."""
+    from . import simple
+
+    mask_s, _ = simple.realize_all(state)
+    items = jax.tree_util.tree_map(
+        lambda a: jax.lax.all_gather(a, AXIS, tiled=True), state.items
+    )
+    mask = jax.lax.all_gather(mask_s, AXIS, tiled=True)
+    size = jax.lax.psum(state.count, AXIS)
+    return items, mask, size
+
+
+def gather_tree(tree: Any, axis: str = AXIS) -> Any:
+    """Replicated global snapshot of per-shard state: every leaf gains a
+    leading [S] axis (scalars become [S] vectors). ``tree_map(lambda a: a[me],
+    snapshot)`` inside shard_map restores the per-shard view bit-exactly, which
+    is how the per-tick sharded driver round-trips state between dispatches."""
+    return jax.tree_util.tree_map(lambda a: jax.lax.all_gather(a, axis), tree)
 
 
 # ---------------------------------------------------------------------------

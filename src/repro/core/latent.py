@@ -38,6 +38,20 @@ def floor_frac(c):
     return k.astype(jnp.int32), jnp.clip(c - k, 0.0, 1.0)
 
 
+def partial_draw(key: jax.Array, weight) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """THE fractional-item realization draw: (floor(C), take_partial, frac(C)).
+
+    ``take_partial`` is True w.p. frac(C) (False when frac == 0). Every
+    realization path -- :func:`realize`, the Samplers' size-only fast paths,
+    and the distributed per-shard/global realizes -- MUST consume the key
+    through this one helper so ``mask.sum() == size`` and size == extract's
+    ``view.size`` stay structural invariants rather than five copies of the
+    same bernoulli."""
+    k, f = floor_frac(weight)
+    take = jax.random.bernoulli(key, f) & (f > 0)
+    return k, take, f
+
+
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass
 class Latent:
@@ -75,11 +89,10 @@ def realize(key: jax.Array, lat: Latent) -> tuple[jax.Array, jax.Array]:
 
     Full slots are always included; the partial slot is included w.p. frac(C).
     """
-    k, f = floor_frac(lat.weight)
+    k, take_partial, _ = partial_draw(key, lat.weight)
     slot = jnp.arange(lat.cap, dtype=jnp.int32)
-    take_partial = jax.random.bernoulli(key, f)
-    mask = (slot < k) | ((slot == k) & take_partial & (f > 0))
-    return mask, k + take_partial.astype(jnp.int32) * (f > 0).astype(jnp.int32)
+    mask = (slot < k) | ((slot == k) & take_partial)
+    return mask, k + take_partial.astype(jnp.int32)
 
 
 def downsample(key: jax.Array, lat: Latent, new_weight) -> Latent:

@@ -25,3 +25,10 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_host_mesh(data: int = 1, model: int = 1):
     """Small mesh over however many host devices exist (tests/benchmarks)."""
     return make_mesh((data, model), ("data", "model"))
+
+
+def make_data_mesh(shards: int, axis: str = "data"):
+    """1-D mesh over the reservoir co-partitioning axis: what the sharded
+    manage loop and the D-R-TBS/D-T-TBS shard_map wrappers run on (the axis
+    name must match :data:`repro.core.distributed.AXIS`)."""
+    return make_mesh((shards,), (axis,))

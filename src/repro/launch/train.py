@@ -4,21 +4,33 @@
   retraining on the current sample -> prequential evaluation -> checkpoint.
 
 The sampler is any scheme from the unified registry (``--scheme rtbs|sw|brs|
-btbs|ttbs``, see :mod:`repro.core.api`); retraining runs through the
-:mod:`repro.manage` SGD adapter, so the reservoir update and the whole
+btbs|ttbs|drtbs|dttbs``, see :mod:`repro.core.api`); retraining runs through
+the :mod:`repro.manage` SGD adapter, so the reservoir update and the whole
 retrain inner loop are compiled programs. Runs any `--arch` (reduced
 `--preset smoke` configs on CPU; full configs are for real pods). Fault
 tolerance: `--resume` restarts bit-exactly from the newest checkpoint
 (params, optimizer, reservoir, stream position).
 
-Example:
+The distributed schemes (paper Sec. 5) run the SAME loop sharded: the driver
+builds a ``data``-axis mesh over ``--shards`` devices (re-exec'ing itself
+with forced host devices when the host has too few -- the per-pod production
+launcher pattern), co-partitions the stream, and runs the whole run as ONE
+fused :func:`repro.manage.make_sharded_run_loop` program: co-partitioned
+reservoir shards, replicated params, one psum per tick. Checkpoint/resume is
+a local-loop feature; the sharded path logs its trace at the end instead.
+
+Examples:
   PYTHONPATH=src python -m repro.launch.train --arch stablelm_12b \
       --preset smoke --ticks 30 --retrain-every 5 --scheme rtbs
+  PYTHONPATH=src python -m repro.launch.train --arch mamba2_370m \
+      --preset smoke --ticks 12 --retrain-every 4 --scheme drtbs --shards 8
 """
 from __future__ import annotations
 
 import argparse
 import math
+import os
+import sys
 
 import jax
 import jax.numpy as jnp
@@ -27,13 +39,21 @@ from repro import config as C
 from repro.checkpoint import AsyncCheckpointer, latest_step, restore_checkpoint
 from repro.core.api import available_schemes, make_sampler
 from repro.data.streams import TokenDriftStream, mode_schedule
-from repro.manage import make_sgd_adapter
+from repro.manage import (
+    make_sgd_adapter,
+    make_sharded_run_loop,
+    materialize_stream,
+    shard_stream,
+)
 from repro.models import zoo
 from repro.optim import AdamWConfig, adamw_init
 from repro.train.steps import make_train_step
 
+DISTRIBUTED_SCHEMES = ("drtbs", "dttbs")
 
-def build_sampler(scheme: str, *, n: int, lam: float, batch_per_tick: int):
+
+def build_sampler(scheme: str, *, n: int, lam: float, batch_per_tick: int,
+                  shards: int = 1):
     """Map the driver's knobs onto each scheme's hyperparameters."""
     if scheme == "rtbs":
         return make_sampler("rtbs", n=n, lam=lam)
@@ -47,7 +67,62 @@ def build_sampler(scheme: str, *, n: int, lam: float, batch_per_tick: int):
         return make_sampler("btbs", lam=lam, cap=max(n, int(3 * steady) + 1))
     if scheme == "ttbs":
         return make_sampler("ttbs", n=n, lam=lam, batch_size=batch_per_tick)
+    if scheme == "drtbs":
+        # cap_s covers the worst transient: every global full item plus this
+        # shard's incoming batch landing on one shard before the downsample
+        return make_sampler("drtbs", n=n, lam=lam, cap_s=n + batch_per_tick)
+    if scheme == "dttbs":
+        # per-shard targets: n/S sample rows fed by b/S arrivals per shard
+        n_s = max(1, -(-n // shards))
+        b_s = max(1.0, batch_per_tick / shards)
+        return make_sampler("dttbs", n=n_s, lam=lam, batch_size=b_s)
     raise ValueError(f"unsupported scheme {scheme!r}; see {available_schemes()}")
+
+
+def run_sharded(args, adapter, stream, sampler):
+    """The Sec.-5 path: the whole run as ONE fused sharded-loop program.
+
+    Co-partitions every tick's batch over the ``data`` mesh, then executes
+    stream -> per-shard sample update -> periodic retrain on the global view
+    -> prequential eval as a single jitted scan (no per-tick dispatch, no
+    checkpoint round-trips -- the trace is logged after the run).
+    """
+    from repro.launch.mesh import make_data_mesh
+
+    S = args.shards
+    # main() already rounded batch_per_tick up to a multiple of S (the
+    # sampler's rates and the padding-free shard segments both depend on it)
+    assert args.batch_per_tick % S == 0
+
+    def mode_of(t):
+        return 0 if args.drift == "none" else mode_schedule(args.drift, t)
+
+    batches, bcounts = materialize_stream(stream, args.ticks,
+                                          batch_size=args.batch_per_tick,
+                                          mode=mode_of)
+    batches, bcounts = shard_stream(batches, bcounts, S)
+
+    mesh = make_data_mesh(S)
+    run = make_sharded_run_loop(sampler, adapter, mesh,
+                                retrain_every=args.retrain_every)
+    print(f"[train] sharded {args.scheme} loop: {S} shards, "
+          f"{args.ticks} ticks, one fused program", flush=True)
+    state, model_state, trace = run(jax.random.key(args.seed), batches,
+                                    bcounts)
+    metric = jax.device_get(trace["metric"])
+    size = jax.device_get(trace["size"])
+    log = []
+    for t in range(args.ticks):
+        log.append({"tick": t, "mode": mode_of(t),
+                    "eval_loss": float(metric[t]),
+                    "sample_size": int(size[t])})
+        print(f"[train] tick={t:4d} mode={mode_of(t)} "
+              f"eval={float(metric[t]):7.4f} |S|={int(size[t]):5d}",
+              flush=True)
+    if args.ckpt_dir:
+        print("[train] note: checkpoint/resume is a local-loop feature; "
+              "the fused sharded run completed in one program")
+    return log
 
 
 def main(argv=None):
@@ -55,7 +130,10 @@ def main(argv=None):
     ap.add_argument("--arch", default="stablelm_12b")
     ap.add_argument("--preset", default="smoke", choices=["smoke", "full"])
     ap.add_argument("--scheme", default="rtbs",
-                    choices=["rtbs", "sw", "brs", "btbs", "ttbs"])
+                    choices=["rtbs", "sw", "brs", "btbs", "ttbs",
+                             "drtbs", "dttbs"])
+    ap.add_argument("--shards", type=int, default=8,
+                    help="data-axis width for the distributed schemes")
     ap.add_argument("--ticks", type=int, default=30)
     ap.add_argument("--batch-per-tick", type=int, default=32)
     ap.add_argument("--reservoir", type=int, default=256)
@@ -71,6 +149,28 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--lr", type=float, default=3e-3)
     args = ap.parse_args(argv)
+
+    if args.scheme in DISTRIBUTED_SCHEMES:
+        flag = "--xla_force_host_platform_device_count"
+        if jax.device_count() < args.shards:
+            if argv is None and flag not in os.environ.get("XLA_FLAGS", ""):
+                # same pattern as examples/distributed_reservoir.py and the
+                # per-pod production launcher: the devices must exist before
+                # jax initializes, so re-exec with the flag set
+                os.environ["XLA_FLAGS"] = (
+                    os.environ.get("XLA_FLAGS", "") + f" {flag}={args.shards}"
+                ).strip()
+                os.execv(sys.executable, [sys.executable] + sys.argv)
+            args.shards = jax.device_count()  # programmatic call: clamp
+        # pad the tick batch to a multiple of the mesh BEFORE the sampler is
+        # built: dttbs calibrates its acceptance rates p/q on the per-shard
+        # arrival rate, and the SGD adapter's LM loss needs padding-free
+        # shard segments (see run_sharded)
+        b = -(-args.batch_per_tick // args.shards) * args.shards
+        if b != args.batch_per_tick:
+            print(f"[train] batch-per-tick {args.batch_per_tick} -> {b} "
+                  f"(multiple of {args.shards} shards)")
+            args.batch_per_tick = b
 
     cfg = (C.get_smoke_config(args.arch) if args.preset == "smoke"
            else C.get_config(args.arch))
@@ -93,11 +193,14 @@ def main(argv=None):
         retrain_steps=args.retrain_steps,
         name=args.arch,
     )
+    sampler = build_sampler(args.scheme, n=args.reservoir, lam=args.lam,
+                            batch_per_tick=args.batch_per_tick,
+                            shards=args.shards)
+    if args.scheme in DISTRIBUTED_SCHEMES:
+        return run_sharded(args, adapter, stream, sampler)
+
     fit = jax.jit(adapter.fit)
     eval_fn = jax.jit(adapter.evaluate)
-
-    sampler = build_sampler(args.scheme, n=args.reservoir, lam=args.lam,
-                            batch_per_tick=args.batch_per_tick)
     proto = jax.ShapeDtypeStruct((args.seq_len,), jnp.int32)
     st = sampler.init(proto)
     model_state = adapter.init()

@@ -7,12 +7,17 @@ and for gradient-trained zoo models (:mod:`repro.manage.models`).
 See DESIGN.md Sec. 8 for the architecture.
 """
 from .loop import (  # noqa: F401
+    init_sharded_state,
     make_manage_step,
     make_run_farm,
     make_run_loop,
+    make_sharded_manage_step,
+    make_sharded_run_farm,
+    make_sharded_run_loop,
     materialize_stream,
     run_farm,
     run_loop,
+    shard_stream,
     tick_keys,
 )
 from .models import (  # noqa: F401

@@ -23,19 +23,46 @@ Entry points:
     :mod:`repro.data.streams` into the fixed-shape [T, bcap, ...] arrays the
     scan consumes.
 
+The ``make_*`` builders are memoized on (sampler, model, retrain cadence), so
+the one-shot wrappers and the Fig. 12/13 drivers never recompile an identical
+program (Samplers/ModelAdapters hash by identity).
+
+Distributed schemes (the paper's Sec. 5 D-R-TBS / D-T-TBS) run the SAME loop
+at cluster scale (DESIGN.md Sec. 10):
+  * :func:`make_sharded_run_loop` -- the identical tick structure, with the
+    whole scan running under ``shard_map`` over the ``data`` mesh axis:
+    co-partitioned batches, replicated params, one psum per tick, and a
+    global-:class:`~repro.core.api.SampleView` assembly (all_gather of shard
+    prefixes + the reserved fractional-item slot) feeding ``model.fit``.
+  * :func:`make_sharded_manage_step` -- the unfused per-tick shard_map driver
+    (one dispatch per tick, state round-tripped through its replicated
+    :func:`~repro.core.distributed.gather_tree` snapshot); bit-identical to
+    the fused loop, and the benchmark's comparison point.
+  * :func:`make_sharded_run_farm` -- Monte-Carlo trials ``vmap``-ed INSIDE the
+    shard_map over replicated trial keys, sharing one co-partitioned stream.
+  * :func:`shard_stream` -- re-pack a :func:`materialize_stream` output into
+    co-partitioned per-shard segments ([T, S*bcap_s, ...] / [T, S]).
+
 Key discipline (bit-exact replays, and what tests assert): tick t uses
 ``fold_in(key, t)`` split into (step, extract, fit) subkeys, so a fused run,
 an unfused per-tick driver, and a checkpoint-resumed run all see identical
-randomness.
+randomness. Sharded runs pass the SAME replicated key to every shard (the
+samplers fold in the shard index where shard-local draws are needed), so the
+discipline carries over unchanged. On non-retrain ticks only the cheap
+``sampler.size`` path runs -- ``extract`` (a prefix permutation + RNG draw for
+R-TBS) happens under the retrain ``lax.cond``, with identical traces because
+size and extract consume the same fold_in subkey.
 """
 from __future__ import annotations
 
+from collections import OrderedDict
 from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import distributed
 from repro.core.api import Sampler
 from repro.manage.models import ModelAdapter
 
@@ -55,12 +82,20 @@ def item_proto(batches: Any) -> Any:
 
 def _check_local(sampler: Sampler) -> None:
     if sampler.distributed:
-        from repro.core.distributed import AXIS
-
         raise ValueError(
             f"sampler {sampler.scheme!r} is a per-shard scheme: its step/extract "
-            f"must run under jax.shard_map over the {AXIS!r} axis and cannot "
-            "drive the single-host manage loop directly"
+            f"must run under jax.shard_map over the {distributed.AXIS!r} axis "
+            "and cannot drive the single-host manage loop directly -- use "
+            "make_sharded_run_loop(sampler, model, mesh)"
+        )
+
+
+def _check_sharded(sampler: Sampler) -> None:
+    if not sampler.distributed or sampler.extract_global is None:
+        raise ValueError(
+            f"sampler {sampler.scheme!r} is a local scheme: the sharded manage "
+            "loop needs per-shard step/extract_global closures (drtbs/dttbs) "
+            "-- use make_run_loop for local schemes"
         )
 
 
@@ -76,18 +111,45 @@ def make_manage_step(sampler: Sampler, model: ModelAdapter, *,
         k_step, k_extract, k_fit = tick_keys(key, t)
         metric = model.evaluate(params, batch_items, bcount)
         state = sampler.step(k_step, state, batch_items, bcount)
-        view = sampler.extract(k_extract, state)
 
+        # extract (full prefix permutation + realization draw) only runs on
+        # retrain ticks; the per-tick size metric takes the payload-free path.
+        # Both consume k_extract, so sizes/views agree and traces are
+        # unchanged vs. extracting every tick.
         do_fit = (t + 1) % retrain_every == 0
         params = jax.lax.cond(
             do_fit,
-            lambda: model.fit(k_fit, params, view),
+            lambda: model.fit(k_fit, params, sampler.extract(k_extract, state)),
             lambda: params,
         )
-        metrics = {"metric": metric, "size": view.size}
+        metrics = {"metric": metric, "size": sampler.size(k_extract, state)}
         return state, params, metrics
 
     return step
+
+
+_BUILD_CACHE: OrderedDict[tuple, Callable] = OrderedDict()
+_BUILD_CACHE_MAX = 64
+
+
+def _memoized(kind: str, key: tuple, build: Callable[[], Callable]) -> Callable:
+    """Memoize compiled-loop builders on (kind, sampler, model, ...): repeat
+    calls (the one-shot wrappers, the Fig. 12/13 drivers re-dispatching per
+    scheme/seed) return the SAME jitted callable, so jax's jit cache is hit
+    instead of re-tracing an identical program.
+
+    LRU-bounded: Samplers/ModelAdapters hash by identity, so a sweep that
+    builds a fresh sampler per configuration gets no hits and would otherwise
+    pin every compiled program for process lifetime."""
+    full = (kind, *key)
+    hit = _BUILD_CACHE.get(full)
+    if hit is None:
+        hit = _BUILD_CACHE[full] = build()
+        if len(_BUILD_CACHE) > _BUILD_CACHE_MAX:
+            _BUILD_CACHE.popitem(last=False)
+    else:
+        _BUILD_CACHE.move_to_end(full)
+    return hit
 
 
 def make_run_loop(sampler: Sampler, model: ModelAdapter, *,
@@ -98,7 +160,18 @@ def make_run_loop(sampler: Sampler, model: ModelAdapter, *,
     ``batches`` leaves are [T, bcap, ...], ``bcounts`` is [T] int32, and
     ``trace`` holds per-tick {"metric" f32[T], "size" i32[T]}. The whole
     stream is consumed by ONE jitted ``lax.scan`` -- no per-tick dispatch.
+
+    Memoized on ``(sampler, model, retrain_every)``: repeat calls return the
+    same compiled callable.
     """
+    return _memoized(
+        "run_loop", (sampler, model, retrain_every),
+        lambda: _build_run_loop(sampler, model, retrain_every),
+    )
+
+
+def _build_run_loop(sampler: Sampler, model: ModelAdapter,
+                    retrain_every: int) -> Callable:
     tick = make_manage_step(sampler, model, retrain_every=retrain_every)
 
     @jax.jit
@@ -138,16 +211,21 @@ def make_run_farm(sampler: Sampler, model: ModelAdapter, *,
     ``vmap`` of the fused loop over ``trials`` independent sampler/model
     randomness streams sharing one data stream; trace leaves gain a leading
     [trials] axis. This is the Fig. 12/13 robustness protocol (mean + expected
-    shortfall over realizations) as one compiled program.
+    shortfall over realizations) as one compiled program. Memoized like
+    :func:`make_run_loop`.
     """
-    run = make_run_loop(sampler, model, retrain_every=retrain_every)
 
-    def farm(key, trials: int, batches, bcounts):
-        keys = jax.random.split(key, trials)
-        _, _, trace = jax.vmap(lambda k: run(k, batches, bcounts))(keys)
-        return trace
+    def build():
+        run = make_run_loop(sampler, model, retrain_every=retrain_every)
 
-    return farm
+        def farm(key, trials: int, batches, bcounts):
+            keys = jax.random.split(key, trials)
+            _, _, trace = jax.vmap(lambda k: run(k, batches, bcounts))(keys)
+            return trace
+
+        return farm
+
+    return _memoized("run_farm", (sampler, model, retrain_every), build)
 
 
 def run_farm(key: jax.Array, trials: int, sampler: Sampler,
@@ -156,6 +234,259 @@ def run_farm(key: jax.Array, trials: int, sampler: Sampler,
     """One-shot convenience wrapper over :func:`make_run_farm`."""
     return make_run_farm(sampler, model, retrain_every=retrain_every)(
         key, trials, batches, bcounts
+    )
+
+
+# ---------------------------------------------------------------------------
+# the sharded loop: the same tick, run per-shard under shard_map (paper Sec. 5)
+# ---------------------------------------------------------------------------
+def _make_sharded_tick(sampler: Sampler, model: ModelAdapter,
+                       retrain_every: int) -> Callable:
+    """The per-shard tick body shared by the fused loop and the per-tick
+    driver. Mirrors :func:`make_manage_step` exactly, with the three global
+    touch points of the paper's Fig. 6(b) protocol:
+
+      * the prequential metric is the |B_t|-weighted psum of per-shard metrics
+        (NaN only when the GLOBAL tick is empty). The weighting assumes
+        ``model.evaluate`` honors ``bcount`` (all closed-form adapters do);
+        an adapter that averages over every row -- the SGD adapter's default
+        scalar LM loss -- additionally needs padding-free shard segments, see
+        :func:`repro.manage.models.make_sgd_adapter`,
+      * ``model.fit`` consumes ``sampler.extract_global`` -- the replicated
+        whole-mesh :class:`~repro.core.api.SampleView` -- so params stay
+        replicated by construction,
+      * the per-tick size metric takes the payload-free ``size_global`` path
+        (extract_global's all_gather only runs on retrain ticks).
+    """
+    axis = distributed.AXIS
+
+    def tick(key, t, state, params, batch_items, bcount):
+        k_step, k_extract, k_fit = tick_keys(key, t)
+        m_s = model.evaluate(params, batch_items, bcount)
+        w_s = jnp.asarray(bcount, jnp.float32)
+        num = jax.lax.psum(jnp.where(bcount > 0, m_s, 0.0) * w_s, axis)
+        den = jax.lax.psum(w_s, axis)
+        metric = jnp.where(den > 0, num / jnp.maximum(den, 1.0),
+                           jnp.float32(jnp.nan))
+
+        state = sampler.step(k_step, state, batch_items, bcount)
+
+        do_fit = (t + 1) % retrain_every == 0
+        params = jax.lax.cond(
+            do_fit,
+            lambda: model.fit(
+                k_fit, params, sampler.extract_global(k_extract, state)
+            ),
+            lambda: params,
+        )
+        size = sampler.size_global(k_extract, state)
+        return state, params, {"metric": metric, "size": size}
+
+    return tick
+
+
+def _sharded_in_specs(axis):
+    from jax.sharding import PartitionSpec as P
+
+    # (key replicated, batch leaves [T, S*bcap_s, ...] split on dim 1,
+    #  bcounts [T, S] split on dim 1); P(None, axis) broadcasts over the
+    # batches pytree as a spec prefix.
+    return (P(), P(None, axis), P(None, axis))
+
+
+def make_sharded_run_loop(sampler: Sampler, model: ModelAdapter, mesh, *,
+                          retrain_every: int = 1) -> Callable:
+    """Compile the paper's model-management loop for a sharded sampler.
+
+    Returns ``run(key, batches, bcounts) -> (state, params, trace)``:
+
+      * ``batches``: pytree, leaves [T, S*bcap_s, ...] -- tick t's arrivals,
+        co-partitioned so shard s owns slots [s*bcap_s, (s+1)*bcap_s)
+        (:func:`shard_stream` builds this layout from a materialized stream);
+      * ``bcounts``: [T, S] int32 valid-prefix counts per shard (empty shards
+        are fine -- the schemes psum the global |B_t|);
+      * ``state``: the final sampler state as the replicated
+        :func:`~repro.core.distributed.gather_tree` snapshot (every leaf
+        gains a leading [S] axis);
+      * ``params``/``trace``: replicated, identical shapes and key discipline
+        as :func:`make_run_loop`.
+
+    The whole stream runs as ONE jitted ``lax.scan`` executing inside
+    ``shard_map`` over the ``data`` axis, so reservoir shards stay resident on
+    their devices for the entire stream: per tick there is exactly one scalar
+    psum (|B_t|) plus the sampler's own tiny count collectives, and payloads
+    cross shards only inside ``extract_global`` on retrain ticks. Memoized on
+    ``(sampler, model, mesh, retrain_every)``.
+    """
+    _check_sharded(sampler)
+    return _memoized(
+        "sharded_run_loop", (sampler, model, mesh, retrain_every),
+        lambda: jax.jit(distributed.shard_map(
+            _sharded_loop_body(sampler, model, retrain_every),
+            mesh=mesh,
+            in_specs=_sharded_in_specs(distributed.AXIS),
+            out_specs=_replicated_out_specs(),
+        )),
+    )
+
+
+def _replicated_out_specs():
+    from jax.sharding import PartitionSpec as P
+
+    # gathered state / params / trace are replicated by construction
+    return (P(), P(), P())
+
+
+def _sharded_loop_body(sampler: Sampler, model: ModelAdapter,
+                       retrain_every: int) -> Callable:
+    """Per-shard whole-stream program: scan of the sharded tick."""
+    tick = _make_sharded_tick(sampler, model, retrain_every)
+
+    def loop(key, batches, bcounts):
+        # per-shard views: batch leaves [T, bcap_s, ...], bcounts [T, 1]
+        bcounts = bcounts[:, 0]
+        state0 = sampler.init(item_proto(batches))
+        params0 = model.init()
+        T = bcounts.shape[0]
+
+        def body(carry, inp):
+            state, params = carry
+            t, batch_items, bcount = inp
+            state, params, metrics = tick(key, t, state, params,
+                                          batch_items, bcount)
+            return (state, params), metrics
+
+        (state, params), trace = jax.lax.scan(
+            body, (state0, params0),
+            (jnp.arange(T, dtype=jnp.int32), batches, bcounts),
+        )
+        return distributed.gather_tree(state), params, trace
+
+    return loop
+
+
+def make_sharded_manage_step(sampler: Sampler, model: ModelAdapter, mesh, *,
+                             retrain_every: int = 1) -> Callable:
+    """ONE tick of the sharded loop as its own dispatch: ``(key, t, state,
+    params, batch_t, bcount_t) -> (state, params, metrics)``.
+
+    ``state`` is the replicated :func:`~repro.core.distributed.gather_tree`
+    snapshot (leading [S] axis on every leaf) -- the same form the fused loop
+    returns -- so fused and per-tick runs compose/resume bit-exactly; each
+    shard slices its own row back out on entry. ``batch_t`` leaves are
+    [S*bcap_s, ...], ``bcount_t`` is [S]. This is the unfused comparison
+    point: per-tick dispatch + the snapshot all_gather every tick, which the
+    fused scan amortizes away (see benchmarks/manage_loop.py).
+    """
+    _check_sharded(sampler)
+
+    def build():
+        from jax.sharding import PartitionSpec as P
+
+        axis = distributed.AXIS
+        tick = _make_sharded_tick(sampler, model, retrain_every)
+
+        def step(key, t, state_g, params, batch_items, bcount):
+            me = jax.lax.axis_index(axis)
+            state = jax.tree_util.tree_map(lambda a: a[me], state_g)
+            state, params, metrics = tick(key, t, state, params,
+                                          batch_items, bcount[0])
+            return distributed.gather_tree(state), params, metrics
+
+        return jax.jit(distributed.shard_map(
+            step, mesh=mesh,
+            in_specs=(P(), P(), P(), P(), P(axis), P(axis)),
+            out_specs=_replicated_out_specs(),
+        ))
+
+    return _memoized(
+        "sharded_manage_step", (sampler, model, mesh, retrain_every), build
+    )
+
+
+def make_sharded_run_farm(sampler: Sampler, model: ModelAdapter, mesh, *,
+                          retrain_every: int = 1) -> Callable:
+    """Monte-Carlo farm of the sharded loop: ``farm(key, trials, batches,
+    bcounts) -> (states, params, trace)`` with a leading [trials] axis on
+    every output leaf.
+
+    Trials are ``vmap``-ed INSIDE the shard_map over replicated trial keys
+    (one co-partitioned stream shared by all trials), so the collectives
+    batch across trials instead of re-entering the mesh per trial -- the
+    Fig. 12/13 robustness protocol at cluster scale.
+    """
+    _check_sharded(sampler)
+
+    def build():
+        loop = _sharded_loop_body(sampler, model, retrain_every)
+
+        def farm_shard(keys, batches, bcounts):
+            return jax.vmap(lambda k: loop(k, batches, bcounts))(keys)
+
+        run = jax.jit(distributed.shard_map(
+            farm_shard, mesh=mesh,
+            in_specs=_sharded_in_specs(distributed.AXIS),
+            out_specs=_replicated_out_specs(),
+        ))
+
+        def farm(key, trials: int, batches, bcounts):
+            keys = jax.random.split(key, trials)
+            return run(keys, batches, bcounts)
+
+        return farm
+
+    return _memoized(
+        "sharded_run_farm", (sampler, model, mesh, retrain_every), build
+    )
+
+
+def init_sharded_state(sampler: Sampler, num_shards: int, proto: Any) -> Any:
+    """The t=0 state in the replicated gathered form the per-tick driver
+    round-trips: ``sampler.init`` per shard, stacked on a leading [S] axis
+    (bit-identical to ``gather_tree`` of S freshly-initialized shards)."""
+    state0 = sampler.init(proto)
+    return jax.tree_util.tree_map(
+        lambda a: jnp.broadcast_to(a[None], (num_shards,) + a.shape), state0
+    )
+
+
+def shard_stream(batches: Any, bcounts: jax.Array, num_shards: int, *,
+                 bcap_s: int | None = None):
+    """Re-pack a :func:`materialize_stream` output into the co-partitioned
+    layout the sharded loop consumes.
+
+    Tick t's ``bcounts[t]`` valid items are split contiguously and evenly
+    over ``num_shards`` (shard s of tick t gets ``floor(b/S) + (s < b mod S)``
+    items -- uneven and empty shards are fine). Returns ``(batches, bcounts)``
+    with leaves [T, S*bcap_s, ...] / [T, S] int32, zero-padded per shard
+    segment; ``bcap_s`` defaults to the max per-shard count.
+    """
+    bcounts = np.asarray(bcounts)
+    T = bcounts.shape[0]
+    S = num_shards
+    counts = np.zeros((T, S), np.int32)
+    for t in range(T):
+        b = int(bcounts[t])
+        counts[t] = b // S + (np.arange(S) < b % S)
+    need = int(counts.max()) if T else 0
+    bcap_s = max(need, 1) if bcap_s is None else bcap_s
+    if need > bcap_s:
+        raise ValueError(f"per-shard batch {need} exceeds bcap_s={bcap_s}")
+
+    def repack(leaf):
+        leaf = np.asarray(leaf)
+        out = np.zeros((T, S * bcap_s) + leaf.shape[2:], leaf.dtype)
+        for t in range(T):
+            off = 0
+            for s in range(S):
+                c = int(counts[t, s])
+                out[t, s * bcap_s:s * bcap_s + c] = leaf[t, off:off + c]
+                off += c
+        return jnp.asarray(out)
+
+    return (
+        jax.tree_util.tree_map(repack, batches),
+        jnp.asarray(counts, jnp.int32),
     )
 
 

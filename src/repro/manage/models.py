@@ -39,9 +39,12 @@ from repro.core.api import SampleView
 from repro.models import simple_ml
 
 
-@dataclasses.dataclass(frozen=True)
+@dataclasses.dataclass(frozen=True, eq=False)
 class ModelAdapter:
-    """A model bound to its shapes; see module docstring for the contract."""
+    """A model bound to its shapes; see module docstring for the contract.
+
+    ``eq=False`` keeps identity hashing so adapters work as cache keys (the
+    manage loop memoizes its compiled programs on (sampler, model, ...))."""
 
     name: str
     init: Callable[[], Any]
@@ -170,6 +173,7 @@ def make_sgd_adapter(*, init_params: Callable[[], Any],
                      batch_field: str,
                      train_batch: int,
                      retrain_steps: int,
+                     row_loss: Callable[[Any, Any], jax.Array] | None = None,
                      name: str = "sgd") -> ModelAdapter:
     """Adapter for gradient-trained models (the LM path of the paper's loop).
 
@@ -180,6 +184,15 @@ def make_sgd_adapter(*, init_params: Callable[[], Any],
     sample view (with replacement, proportional to the membership mask) and
     runs one train step on each -- a fixed trip count, so the whole adapter
     stays scan-safe.
+
+    ``evaluate`` caveat: the scalar ``loss`` averages over ALL rows of the
+    eval batch, so with the default ``row_loss=None`` every row must be
+    valid -- drivers must not zero-pad eval batches (the sharded loop's
+    ``shard_stream`` pads per-shard segments whenever |B_t| is not a multiple
+    of the shard count; ``launch/train.py`` rounds the tick batch up
+    accordingly). Pass ``row_loss(params, batch) -> [rows]`` to get a
+    bcount-masked prefix mean instead (same convention as the closed-form
+    adapters), which makes padding harmless.
     """
 
     def init():
@@ -209,9 +222,15 @@ def make_sgd_adapter(*, init_params: Callable[[], Any],
         # empty-sample guard: nothing to train on yet
         return jax.lax.cond(view.size > 0, do_fit, lambda: state)
 
-    def evaluate(state, batch, bcount):
-        del bcount  # LM losses are already per-token means over the batch
-        return loss(state["params"], {batch_field: batch})
+    if row_loss is None:
+        def evaluate(state, batch, bcount):
+            del bcount  # scalar loss: caller guarantees no padded rows
+            return loss(state["params"], {batch_field: batch})
+    else:
+        def evaluate(state, batch, bcount):
+            return _prefix_mean(
+                row_loss(state["params"], {batch_field: batch}), bcount
+            )
 
     return ModelAdapter(
         name=name,

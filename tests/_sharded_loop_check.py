@@ -1,0 +1,191 @@
+"""Subprocess check for the fused sharded manage loop on an 8-shard host mesh.
+
+Invoked by tests/test_sharded_loop.py with XLA_FLAGS forcing 8 host devices
+(pytest's own process keeps the default device count). Validates, on a real
+multi-device mesh with uneven/empty per-shard batches:
+
+  * fused scan == unfused per-tick shard_map driver, bit-exactly, at 8 shards
+  * Theorem 4.2 invariant  Pr[i in S_t] = (C_t/W_t) w_t(i)  on the FINAL
+    reservoir of every Monte-Carlo farm trial (the farm vmaps whole fused
+    loops inside one shard_map)
+  * deterministic W_t / C_t trajectories == the analytic recurrence, and the
+    per-tick size trace stays in {floor(C_t), floor(C_t)+1}
+  * the global sample-size bound and zero capacity overflow
+  * the fractional item is materialized whenever counted: the model's fit
+    (which receives extract_global's view on retrain ticks) returns
+    view.mask.sum(), which must equal the logged size for every trial
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import math  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.core.api import make_sampler  # noqa: E402
+from repro.launch.mesh import make_data_mesh  # noqa: E402
+from repro.manage import (  # noqa: E402
+    init_sharded_state,
+    make_sharded_manage_step,
+    make_sharded_run_farm,
+    make_sharded_run_loop,
+)
+from repro.manage.models import ModelAdapter  # noqa: E402
+
+S = 8          # shards
+CAP_S = 32     # per-shard reservoir capacity
+BCAP_S = 8     # per-shard batch capacity
+N = 40         # global max sample size: the stream saturates mid-run and
+#                undershoots again, so the FINAL C = W_T is fractional and
+#                the farm exercises the reserved partial-item slot
+LAM = 0.3
+TRIALS = 4000
+RETRAIN_EVERY = 2
+
+# global batch sizes per tick; deliberately uneven across shards (incl. empty)
+GLOBAL_BATCHES = [24, 8, 0, 40, 16, 8, 8, 4]
+T = len(GLOBAL_BATCHES)
+
+
+def split_counts(total, s=S):
+    """Deterministic uneven split of `total` items over s shards."""
+    base = np.zeros(s, np.int32)
+    rs = np.random.RandomState(total * 7 + 13)
+    for _ in range(total):
+        base[rs.randint(0, max(1, s // 2 + total % s))] += 1  # skewed
+    while base.max() > BCAP_S:  # respect per-shard capacity
+        src = base.argmax()
+        dst = base.argmin()
+        base[src] -= 1
+        base[dst] += 1
+    return base
+
+
+def probe_model():
+    """Item-type-agnostic adapter: ``fit`` returns the GLOBAL view's
+    mask.sum(), so the final params witness that the fractional item's
+    payload is selected exactly when it is counted."""
+    return ModelAdapter(
+        name="probe",
+        init=lambda: jnp.float32(-1.0),
+        fit=lambda key, params, view: jnp.sum(view.mask).astype(jnp.float32),
+        evaluate=lambda params, batch, bcount: jnp.float32(0.0),
+        hyper={"probe": True},
+    )
+
+
+def build_stream():
+    batch_items = np.zeros((T, S * BCAP_S), np.int32)
+    batch_counts = np.zeros((T, S), np.int32)
+    for t, g in enumerate(GLOBAL_BATCHES):
+        counts = split_counts(g)
+        batch_counts[t] = counts
+        nid = 0
+        for s in range(S):
+            for j in range(counts[s]):
+                batch_items[t, s * BCAP_S + j] = 1000 * (t + 1) + nid
+                nid += 1
+    return jnp.asarray(batch_items), jnp.asarray(batch_counts)
+
+
+def main():
+    mesh = make_data_mesh(S)
+    sampler = make_sampler("drtbs", n=N, lam=LAM, cap_s=CAP_S)
+    model = probe_model()
+    batches, bcounts = build_stream()
+
+    # ---- fused == per-tick, bit-exactly, on the real 8-shard mesh ---------
+    key = jax.random.key(11)
+    run = make_sharded_run_loop(sampler, model, mesh,
+                                retrain_every=RETRAIN_EVERY)
+    state_f, params_f, trace_f = run(key, batches, bcounts)
+
+    tick = make_sharded_manage_step(sampler, model, mesh,
+                                    retrain_every=RETRAIN_EVERY)
+    state = init_sharded_state(sampler, S, jax.ShapeDtypeStruct((), jnp.int32))
+    params = model.init()
+    metrics, sizes = [], []
+    for t in range(T):
+        state, params, m = tick(key, jnp.int32(t), state, params,
+                                batches[t], bcounts[t])
+        metrics.append(np.asarray(m["metric"]))
+        sizes.append(np.asarray(m["size"]))
+    np.testing.assert_array_equal(np.asarray(trace_f["metric"]),
+                                  np.asarray(metrics))
+    np.testing.assert_array_equal(np.asarray(trace_f["size"]),
+                                  np.asarray(sizes))
+    for a, b in zip(jax.tree_util.tree_leaves(state_f),
+                    jax.tree_util.tree_leaves(state)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(np.asarray(params_f), np.asarray(params))
+
+    # ---- Monte-Carlo farm ----------------------------------------------------
+    farm = make_sharded_run_farm(sampler, model, mesh,
+                                 retrain_every=RETRAIN_EVERY)
+    states, params, trace = farm(jax.random.key(17), TRIALS, batches, bcounts)
+
+    items_np = np.asarray(states.items)          # [TRIALS, S, CAP_S]
+    nfull_np = np.asarray(states.nfull)          # [TRIALS, S]
+    partial_np = np.asarray(states.partial_item)[:, 0]  # replicated
+    weight_np = np.asarray(states.weight)[:, 0]
+    tw_np = np.asarray(states.total_weight)[:, 0]
+    size_np = np.asarray(trace["size"])          # [TRIALS, T]
+    params_np = np.asarray(params)               # [TRIALS]
+
+    assert int(np.asarray(states.overflow).sum()) == 0, "capacity overflow"
+
+    # deterministic trajectories + per-tick size in {floor(C_t), floor(C_t)+1}
+    w = 0.0
+    for t, g in enumerate(GLOBAL_BATCHES):
+        w = math.exp(-LAM) * w + g
+        c = min(N, w)
+        lo, hi = math.floor(c), math.floor(c) + 1
+        assert ((size_np[:, t] >= lo) & (size_np[:, t] <= hi)).all(), (
+            t, c, size_np[:, t].min(), size_np[:, t].max())
+    W_T = w
+    C_T = min(N, W_T)
+    assert (np.abs(tw_np - W_T) < 1e-3 * max(1.0, W_T)).all()
+    assert (np.abs(weight_np - C_T) < 1e-3 * max(1.0, C_T)).all()
+
+    # global bound
+    tot_full = nfull_np.sum(axis=1)
+    assert (tot_full <= N).all(), tot_full.max()
+    assert (np.floor(weight_np + 1e-4) >= tot_full).all()
+
+    # the fit on the LAST retrain tick saw a view with mask.sum() == size
+    last_fit = max(t for t in range(T) if (t + 1) % RETRAIN_EVERY == 0)
+    np.testing.assert_array_equal(params_np,
+                                  size_np[:, last_fit].astype(np.float32))
+
+    # Theorem 4.2: membership per batch over the farm's final reservoirs
+    frac = weight_np - np.floor(weight_np)
+    rs = np.random.RandomState(0)
+    take_partial = rs.rand(TRIALS) < frac
+    slot_valid = (np.arange(CAP_S)[None, None, :] < nfull_np[:, :, None])
+    bidx = np.where(slot_valid, items_np // 1000, 0)
+    hits = np.zeros(T + 1)
+    for t in range(1, T + 1):
+        hits[t] = (bidx == t).sum()
+    pidx = partial_np // 1000
+    for t in range(1, T + 1):
+        hits[t] += ((pidx == t) & take_partial).sum()
+
+    bad = []
+    for j, g in enumerate(GLOBAL_BATCHES):
+        if g == 0:
+            continue
+        emp = hits[j + 1] / TRIALS / g
+        expect = (C_T / W_T) * math.exp(-LAM * (T - 1 - j))
+        if abs(emp - expect) > 0.03:
+            bad.append((j, emp, expect))
+    assert not bad, bad
+
+    print("sharded-loop checks passed:",
+          f"W_T={W_T:.3f} C_T={C_T:.3f} trials={TRIALS}")
+
+
+if __name__ == "__main__":
+    main()

@@ -123,6 +123,81 @@ def test_local_step_scans(scheme):
     assert int(view.size) == int(view.mask.sum())
 
 
+@pytest.mark.parametrize("scheme", sorted(LOCAL))
+def test_extract_mask_sum_equals_size_local(scheme):
+    """Regression: an item counted in view.size must be materialized in the
+    view (mask.sum() == size) for EVERY realization key -- R-TBS's fractional
+    item is drawn per extract, so multiple keys hit both branches."""
+    s = make_sampler(scheme, **LOCAL[scheme])
+    batches, bcounts = _stream_ids()
+    state = s.init(PROTO)
+    for t in range(batches.shape[0]):
+        state = s.step(jax.random.fold_in(jax.random.key(5), t), state,
+                       batches[t], bcounts[t])
+    for k in range(10):
+        view = s.extract(jax.random.key(100 + k), state)
+        assert int(view.mask.sum()) == int(view.size)
+        assert int(s.size(jax.random.key(100 + k), state)) == int(view.size)
+
+
+@pytest.mark.parametrize("scheme", sorted(DISTRIBUTED))
+def test_extract_mask_sum_equals_size_distributed(scheme):
+    """The dropped-fractional-item regression (D-R-TBS): the partial payload
+    occupies the reserved slot whenever it is counted, per shard AND in the
+    global view. Hyperparameters keep C fractional (unsaturated stream) so
+    the partial-item branch is actually exercised."""
+    from jax.sharding import PartitionSpec as P
+
+    nsh = jax.device_count()
+    hyper = dict(DISTRIBUTED[scheme])
+    if scheme == "drtbs":
+        # 3 ticks of 2 items/shard: W = 2*nsh*(d^2+d+1) < n at any mesh
+        # width, so C = W keeps a fraction of ~0.6 and ~24 keys hit both
+        # partial-item branches with overwhelming probability
+        hyper.update(n=5 * nsh + 5, lam=0.3)
+    s = make_sampler(scheme, **hyper)
+    mesh = jax.make_mesh((nsh,), (dist.AXIS,))
+    bcap_s = 8
+    nkeys = 24
+
+    def run(key, bitems, bcounts):
+        state = s.init(PROTO)
+        for t in range(3):
+            state = s.step(jax.random.fold_in(key, t), state,
+                           bitems[t], bcounts[t, 0])
+        outs = []
+        for k in range(nkeys):
+            kk = jax.random.fold_in(key, 50 + k)
+            view = s.extract(kk, state)
+            gview = s.extract_global(kk, state)
+            outs.append((view.mask, view.size[None],
+                         s.size(kk, state)[None],
+                         gview.mask, gview.size[None],
+                         s.size_global(kk, state)[None]))
+        return outs
+
+    f = jax.jit(dist.shard_map(
+        run, mesh=mesh,
+        in_specs=(P(), P(None, dist.AXIS), P(None, dist.AXIS)),
+        out_specs=[(P(dist.AXIS), P(dist.AXIS), P(dist.AXIS),
+                    P(), P(), P())] * nkeys,
+    ))
+    bitems = jnp.arange(3 * nsh * bcap_s, dtype=jnp.int32).reshape(
+        3, nsh * bcap_s) + 1
+    bcounts = jnp.full((3, nsh), 2, jnp.int32)
+    sizes_seen = set()
+    for mask, size_s, fast_s, gmask, gsize, gfast in f(jax.random.key(2),
+                                                       bitems, bcounts):
+        # per-shard: every counted item is selected by the mask
+        assert int(mask.sum()) == int(size_s.sum()) == int(fast_s.sum())
+        # global view: ditto, and it agrees with the per-shard realization
+        assert int(gmask.sum()) == int(gsize[0]) == int(gfast[0])
+        assert int(gsize[0]) == int(size_s.sum())
+        sizes_seen.add(int(gsize[0]))
+    if scheme == "drtbs":  # both partial-item branches must have been hit
+        assert len(sizes_seen) == 2, sizes_seen
+
+
 def test_bounded_schemes_respect_n():
     for scheme in ("rtbs", "brs", "sw"):
         s = make_sampler(scheme, **LOCAL[scheme])
@@ -308,6 +383,52 @@ def test_sgd_adapter_is_scan_safe():
                        size=jnp.int32(0))
     state2 = jax.jit(adapter.fit)(jax.random.key(1), state, empty)
     assert float(state2["params"]["w"]) == float(state["params"]["w"])
+
+
+def test_run_loop_memoized_no_retrace():
+    """run_loop/run_farm one-shot wrappers must not rebuild + re-jit the scan
+    per call: make_run_loop is memoized on (sampler, model, retrain_every)
+    and the jit cache shows exactly one trace for repeat same-shape runs."""
+    from repro.manage import run_loop
+
+    sampler = make_sampler("rtbs", n=20, lam=0.1)
+    model = make_model("linreg", dim=2)
+    r1 = make_run_loop(sampler, model)
+    assert r1 is make_run_loop(sampler, model)
+    assert r1 is not make_run_loop(sampler, model, retrain_every=2)
+    assert make_run_farm(sampler, model) is make_run_farm(sampler, model)
+    # an equivalent-but-fresh sampler is a different program (identity hash)
+    assert make_run_loop(make_sampler("rtbs", n=20, lam=0.1), model) is not r1
+
+    batches, bcounts = materialize_stream(LinRegStream(seed=2), 5,
+                                          batch_size=8)
+    run_loop(jax.random.key(0), sampler, model, batches, bcounts)
+    run_loop(jax.random.key(1), sampler, model, batches, bcounts)
+    assert r1._cache_size() == 1  # second call hit the jit cache, no retrace
+
+
+def test_sgd_adapter_row_loss_masks_padding():
+    """With row_loss, evaluate is a bcount-masked prefix mean: zero-padded
+    eval rows (e.g. sharded per-shard segments) cannot skew the metric."""
+    def row_loss(params, batch):
+        return (batch["tokens"][:, 0] * params["w"] - batch["tokens"][:, 1]) ** 2
+
+    adapter = make_sgd_adapter(
+        init_params=lambda: {"w": jnp.float32(3.0)},
+        train_step=lambda p, o, b: (p, o, {}),
+        init_opt_state=lambda p: jnp.int32(0),
+        loss=lambda p, b: jnp.mean(row_loss(p, b)),
+        row_loss=row_loss,
+        batch_field="tokens",
+        train_batch=4,
+        retrain_steps=1,
+    )
+    state = adapter.init()
+    valid = jnp.asarray([[1.0, 3.0], [2.0, 6.0]])          # exact fit: loss 0
+    garbage = jnp.zeros((2, 2)).at[:, 1].set(99.0)          # would blow up
+    batch = jnp.concatenate([valid, garbage])
+    assert float(adapter.evaluate(state, batch, jnp.int32(2))) == 0.0
+    assert float(adapter.evaluate(state, batch, jnp.int32(4))) > 1.0
 
 
 def test_manage_loop_rejects_distributed_samplers():
