@@ -1,0 +1,72 @@
+"""Validate emitted BENCH_*.json files against the shared schema.
+
+Usage: ``python -m benchmarks.check_bench BENCH_manage_loop.json [...]``
+(no args: validate every BENCH_*.json at the repo root). Exits non-zero on
+the first violation -- the CI bench-smoke job gates on this before uploading
+the files as artifacts, so the PR-over-PR perf trajectory stays parseable.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+from .common import BENCH_SCHEMA_KEYS, REPO_ROOT
+
+#: per-suite required derived fields on at least one row (the criterion rows)
+REQUIRED_ROW_FIELDS = {
+    "sampler_step": ("scheme", "cap", "impl", "items_per_s", "steps_per_s"),
+    "manage_loop": ("ticks_per_s",),
+}
+
+
+def check_file(path: pathlib.Path) -> list[str]:
+    errors = []
+    try:
+        payload = json.loads(path.read_text())
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"{path.name}: unreadable ({e})"]
+    for k in BENCH_SCHEMA_KEYS:
+        if k not in payload:
+            errors.append(f"{path.name}: missing top-level key {k!r}")
+    rows = payload.get("rows", [])
+    if not isinstance(rows, list) or not rows:
+        errors.append(f"{path.name}: rows must be a non-empty list")
+        return errors
+    for i, row in enumerate(rows):
+        if not isinstance(row.get("name"), str):
+            errors.append(f"{path.name}: rows[{i}] missing str 'name'")
+        us = row.get("us_per_call")
+        if not isinstance(us, (int, float)) or us <= 0:
+            errors.append(f"{path.name}: rows[{i}] bad us_per_call {us!r}")
+    bench = payload.get("benchmark")
+    for field in REQUIRED_ROW_FIELDS.get(bench, ()):
+        if not any(field in r for r in rows):
+            errors.append(f"{path.name}: no row carries {field!r}")
+    # the headline criterion: the fused sampler-step rows must record their
+    # speedup against the pre-fused reference
+    if bench in ("sampler_step", "manage_loop"):
+        fused = [r for r in rows if r.get("impl") == "fused"]
+        if fused and not any("speedup_vs_ref" in r for r in fused):
+            errors.append(f"{path.name}: fused rows lack speedup_vs_ref")
+    return errors
+
+
+def main() -> None:
+    paths = [pathlib.Path(a) for a in sys.argv[1:]]
+    if not paths:
+        paths = sorted(REPO_ROOT.glob("BENCH_*.json"))
+    if not paths:
+        raise SystemExit("no BENCH_*.json files found")
+    errors = []
+    for p in paths:
+        errors += check_file(p)
+    for e in errors:
+        print(f"SCHEMA ERROR: {e}", file=sys.stderr)
+    if errors:
+        raise SystemExit(1)
+    print(f"ok: {', '.join(p.name for p in paths)} valid")
+
+
+if __name__ == "__main__":
+    main()

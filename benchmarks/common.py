@@ -1,9 +1,52 @@
 """Shared benchmark helpers."""
 from __future__ import annotations
 
+import json
+import pathlib
 import time
 
 import numpy as np
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+#: every BENCH_*.json written by a suite follows this shape (validated by
+#: benchmarks/check_bench.py and the CI bench-smoke job):
+#:   {"benchmark": str, "generated_unix": float, "jax": str, "backend": str,
+#:    "smoke": bool, "rows": [{"name": str, "us_per_call": float, ...derived}]}
+BENCH_SCHEMA_KEYS = ("benchmark", "generated_unix", "jax", "backend", "smoke",
+                     "rows")
+
+
+def smoke_mode() -> bool:
+    """CI smoke sizing: tiny caps / dry-run-length streams. Enabled by the
+    ``--smoke`` flag of the benchmark mains or ``BENCH_SMOKE=1`` (the env var
+    reaches suites invoked through benchmarks.run)."""
+    import os
+    import sys
+
+    return "--smoke" in sys.argv or os.environ.get("BENCH_SMOKE") == "1"
+
+
+def write_bench_json(benchmark: str, rows, *, smoke: bool | None = None):
+    """Write ``BENCH_<benchmark>.json`` at the repo root from ``emit``-style
+    rows, so the perf trajectory is machine-readable PR-over-PR instead of
+    living only in stdout. Returns the path."""
+    import jax
+
+    payload = {
+        "benchmark": benchmark,
+        "generated_unix": time.time(),
+        "jax": jax.__version__,
+        "backend": jax.default_backend(),
+        "smoke": smoke_mode() if smoke is None else smoke,
+        "rows": [
+            {"name": name, "us_per_call": round(float(us), 2), **derived}
+            for name, us, derived in rows
+        ],
+    }
+    path = REPO_ROOT / f"BENCH_{benchmark}.json"
+    path.write_text(json.dumps(payload, indent=2) + "\n")
+    return path
 
 
 def time_fn(fn, *args, warmup=2, iters=10):

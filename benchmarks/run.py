@@ -6,9 +6,14 @@ report). Prints ``name,us_per_call,derived`` CSV.
   fig12  -- linear regression MSE + ES, saturated/unsaturated (paper Fig. 12)
   fig13  -- Naive Bayes on the Usenet2-like stream (paper Fig. 13)
   fig789 -- distributed impl comparison + scale-out/up (paper Figs. 7-9)
+  manage -- fused/superbatched manage loop + sampler-step criterion
+            (writes BENCH_manage_loop.json)
+  sampler -- sampler-step throughput sweep, fused vs pre-fused reference
+            (writes BENCH_sampler_step.json)
   roofline -- dry-run roofline table (EXPERIMENTS.md §Roofline)
 
 Select with ``python -m benchmarks.run [names...]`` (default: all).
+``--smoke`` / BENCH_SMOKE=1 shrinks the json-emitting suites to CI size.
 """
 from __future__ import annotations
 
@@ -17,11 +22,12 @@ import time
 
 from .common import emit
 
-SUITES = ["fig1", "table1", "fig12", "fig13", "fig789", "manage", "roofline"]
+SUITES = ["fig1", "table1", "fig12", "fig13", "fig789", "manage", "sampler",
+          "roofline"]
 
 
 def main() -> None:
-    args = sys.argv[1:] or SUITES
+    args = [a for a in sys.argv[1:] if a != "--smoke"] or SUITES
     for name in args:
         t0 = time.time()
         if name == "fig1":
@@ -36,6 +42,8 @@ def main() -> None:
             from . import fig789_distributed as m
         elif name == "manage":
             from . import manage_loop as m
+        elif name == "sampler":
+            from . import sampler_step as m
         elif name == "roofline":
             from . import roofline as m
         else:

@@ -1,0 +1,149 @@
+"""Sampler-step throughput: fused hot path vs the pre-fused reference.
+
+Times ONE sampler step (the inner operation of the paper's Sec. 5 hot loop)
+at reservoir capacities up to 4096+ on the default backend:
+
+  * ``rtbs_fused_*``  -- :func:`repro.core.rtbs.step`: composed slot map +
+    single two-source payload pass, argsort-free swap-or-not RNG
+    (DESIGN.md Sec. 11).
+  * ``rtbs_ref_*``    -- :func:`repro.core.rtbs.step_ref`: the pre-fused
+    implementation (per-stage gathers, widened-buffer insert, exact argsort
+    permutations) -- i.e. "current main" before this optimization.
+  * ``ttbs/brs``      -- the simpler schemes' steps (now argsort-free; no
+    pre-fused twin kept, so throughput only).
+
+Both phases of Alg. 2 are measured: ``sat`` (steady state: W >= n, victim
+replacement) and ``unsat`` (fill-up / decay downsampling). Scalar
+trajectories of fused and ref are asserted equal before timing. Emits
+``BENCH_sampler_step.json`` at the repo root (EXPERIMENTS.md
+§Sampler-throughput).
+"""
+from __future__ import annotations
+
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import rtbs
+from repro.core.api import make_sampler
+
+from .common import smoke_mode, write_bench_json
+
+LAM = 0.05
+D = 8
+
+
+def _warm(step, key, st, batch, bcount, ticks):
+    for t in range(ticks):
+        st = step(jax.random.fold_in(key, t), st, batch, jnp.int32(bcount))
+    jax.block_until_ready(st)
+    return st
+
+
+def _time_step(step, key, st, batch, bcount, iters):
+    """Best-of-N wall time (timeit's convention, applied to both impls
+    alike): single-step latencies are ~1ms, where scheduler/allocator noise
+    only ever ADDS time, so min is the contention-robust estimator."""
+    for i in range(2):  # warm (jit cache + allocator)
+        jax.block_until_ready(step(jax.random.fold_in(key, 1000 + i), st,
+                                   batch, jnp.int32(bcount)))
+    ts = []
+    for i in range(iters):
+        t0 = time.perf_counter()
+        out = step(jax.random.fold_in(key, 2000 + i), st, batch,
+                   jnp.int32(bcount))
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.min(ts) * 1e6)
+
+
+def rtbs_rows(cap: int, bcap: int, iters: int = 30):
+    """fused-vs-ref rows for R-TBS at reservoir capacity ``cap`` (= n)."""
+    proto = jax.ShapeDtypeStruct((D,), jnp.float32)
+    batch = jnp.ones((bcap, D), jnp.float32)
+    key = jax.random.key(0)
+
+    fused = jax.jit(functools.partial(rtbs.step, n=cap, lam=LAM))
+    ref = jax.jit(functools.partial(rtbs.step_ref, n=cap, lam=LAM))
+
+    # equivalence before timing: identical C/W scalar trajectories
+    st_f = st_r = rtbs.init(proto, cap)
+    for t in range(6):
+        kt = jax.random.fold_in(key, t)
+        st_f = fused(kt, st_f, batch, jnp.int32(bcap))
+        st_r = ref(kt, st_r, batch, jnp.int32(bcap))
+    np.testing.assert_allclose(float(st_f.lat.weight), float(st_r.lat.weight),
+                               rtol=1e-5)
+    np.testing.assert_allclose(float(st_f.total_weight),
+                               float(st_r.total_weight), rtol=1e-5)
+
+    # saturated steady state: warm until W >= n
+    warm_ticks = max(8, 2 * cap // bcap)
+    st_sat = _warm(fused, key, rtbs.init(proto, cap), batch, bcap, warm_ticks)
+    assert float(st_sat.total_weight) >= cap, "stream too short to saturate"
+    # unsaturated: a few fill-up ticks
+    st_un = _warm(fused, key, rtbs.init(proto, cap), batch, bcap, 2)
+
+    rows = []
+    for phase, st in [("sat", st_sat), ("unsat", st_un)]:
+        derived = {}
+        for name, step in [("fused", fused), ("ref", ref)]:
+            us = _time_step(step, key, st, batch, bcap, iters)
+            derived[name] = {
+                "scheme": "rtbs", "impl": name, "phase": phase, "cap": cap,
+                "bcap": bcap, "steps_per_s": round(1e6 / us, 1),
+                "items_per_s": round(bcap * 1e6 / us, 1), "us": us,
+            }
+        derived["fused"]["speedup_vs_ref"] = round(
+            derived["ref"]["us"] / derived["fused"]["us"], 2
+        )
+        for name in ("fused", "ref"):
+            d = derived[name]
+            us = d.pop("us")
+            rows.append((f"rtbs_{name}_{phase}_cap{cap}", us, d))
+    return rows
+
+
+def simple_rows(cap: int, bcap: int, iters: int = 30):
+    """Throughput rows for the buffer schemes (argsort-free picks/keeps)."""
+    proto = jax.ShapeDtypeStruct((D,), jnp.float32)
+    batch = jnp.ones((bcap, D), jnp.float32)
+    key = jax.random.key(1)
+    rows = []
+    for scheme, hyper in [
+        ("ttbs", dict(n=cap, lam=LAM, batch_size=float(bcap), cap=2 * cap)),
+        ("brs", dict(n=cap)),
+    ]:
+        s = make_sampler(scheme, **hyper)
+        step = jax.jit(s.step)
+        st = s.init(proto)
+        st = _warm(step, key, st, batch, bcap, 6)
+        us = _time_step(step, key, st, batch, bcap, iters)
+        rows.append((
+            f"{scheme}_step_cap{cap}", us,
+            {"scheme": scheme, "impl": "fast", "phase": "steady", "cap": cap,
+             "bcap": bcap, "steps_per_s": round(1e6 / us, 1),
+             "items_per_s": round(bcap * 1e6 / us, 1)},
+        ))
+    return rows
+
+
+def run():
+    smoke = smoke_mode()
+    caps = [(64, 16)] if smoke else [(1024, 256), (4096, 512)]
+    iters = 5 if smoke else 30
+    rows = []
+    for cap, bcap in caps:
+        rows += rtbs_rows(cap, bcap, iters=iters)
+        rows += simple_rows(cap, bcap, iters=iters)
+    write_bench_json("sampler_step", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    from .common import emit
+
+    emit(run())

@@ -112,6 +112,28 @@ class Sampler:
         return f"Sampler({self.scheme}, {hp})"
 
 
+def materialize_view(view: SampleView) -> SampleView:
+    """Pack a realized sample's selected rows to the buffer head
+    (:func:`repro.core.latent.compact_items`, i.e. the reservoir_compact
+    kernel: Pallas on TPU, jnp oracle elsewhere), so downstream consumers see
+    a dense ``[0, size)`` prefix instead of a scattered membership mask.
+
+    A no-op in effect for the local schemes (their masks are already
+    prefixes); the distributed global views (all-gathered shard prefixes +
+    the reserved fractional-item slot) are genuinely block-sparse and this is
+    where the kernel earns its keep. Mask-weighted model fits are
+    permutation-invariant, so fitting on the materialized view is equivalent
+    -- and cheaper for gather-heavy adapters. ``mask.sum() == size`` is
+    preserved.
+    """
+    from . import latent as lt
+
+    items = lt.compact_items(view.items, view.mask)
+    cap = view.mask.shape[0]
+    mask = jnp.arange(cap) < view.size
+    return SampleView(items=items, mask=mask, size=view.size)
+
+
 _REGISTRY: dict[str, Callable[..., Sampler]] = {}
 
 
@@ -289,7 +311,9 @@ def _make_dttbs(*, n: int, lam: float, batch_size: float, cap: int | None = None
     def extract_global(key, state):
         del key  # deterministic membership
         items, mask, size = distributed.buffer_realize_global(state)
-        return SampleView(items=items, mask=mask, size=size)
+        # shard prefixes are block-sparse in the gathered view: compact them
+        # to a dense [0, size) prefix (reservoir_compact kernel)
+        return materialize_view(SampleView(items=items, mask=mask, size=size))
 
     def size_global(key, state):
         del key
@@ -345,7 +369,9 @@ def _make_drtbs(*, n: int, lam: float, cap_s: int) -> Sampler:
 
     def extract_global(key, state):
         items, mask, size = distributed.drtbs_realize_global(key, state)
-        return SampleView(items=items, mask=mask, size=size)
+        # the gathered view interleaves per-shard valid prefixes with garbage
+        # tails (+ the reserved fractional slot): compact to a dense prefix
+        return materialize_view(SampleView(items=items, mask=mask, size=size))
 
     return Sampler(
         scheme="drtbs",

@@ -153,7 +153,7 @@ def _dist_downsample(key, st: DRTBSShard, new_weight) -> DRTBSShard:
     is_donor = (me == donor_shard) & (sel_total > 0)
 
     # --- local compaction ----------------------------------------------------
-    perm = rng.prefix_permutation(
+    perm = rng.prefix_permutation_fast(
         jax.random.fold_in(k_local, me), cap_s, st.nfull
     )
     # fulls kept locally:
@@ -315,11 +315,11 @@ def drtbs_shard_step(
             )[me]
             k_vic, k_pick = jax.random.split(jax.random.fold_in(k_loc, me))
             # delete del_s local victims by compaction to (nfull - del_s) ...
-            vperm = rng.prefix_permutation(k_vic, cap_s, st.nfull)
+            vperm = rng.prefix_permutation_fast(k_vic, cap_s, st.nfull)
             keep = st.nfull - del_s
             compacted = lt.gather(st.items, vperm)
             # ... then append ins_s local batch picks
-            picks = rng.prefix_permutation(k_pick, bcap, bcount_local)
+            picks = rng.prefix_permutation_fast(k_pick, bcap, bcount_local)
             i = jnp.arange(bcap, dtype=jnp.int32)
             dest = jnp.where(i < ins_s, keep + i, cap_s)
             dropped = jnp.maximum(keep + ins_s - cap_s, 0)

@@ -13,8 +13,10 @@ Fixed-shape JAX encoding (jit/scan/shard_map-safe):
 The key operator is :func:`downsample` (paper Algorithm 3), which rescales every
 item's inclusion probability by exactly C'/C (Theorem 4.1). We implement it as a
 branch-selected gather: each branch produces a slot-index map ``src`` (new slot ->
-old slot) so the buffer rebuild is a single fixed-shape gather, which is also the
-form the Pallas ``reservoir_compact`` kernel accelerates.
+old slot), exposed on its own as :func:`downsample_map` so the fused R-TBS step
+can compose a whole tick's rewrites into ONE two-source payload pass (the
+``tbs_step`` Pallas kernel; DESIGN.md Sec. 11). :func:`realize_compact` packs a
+realized sample to the buffer head via the ``reservoir_compact`` kernel.
 """
 from __future__ import annotations
 
@@ -95,21 +97,57 @@ def realize(key: jax.Array, lat: Latent) -> tuple[jax.Array, jax.Array]:
     return mask, k + take_partial.astype(jnp.int32)
 
 
-def downsample(key: jax.Array, lat: Latent, new_weight) -> Latent:
-    """Paper Algorithm 3: rescale inclusion probabilities by C'/C (Theorem 4.1).
+def compact_items(items: Any, mask: jax.Array) -> Any:
+    """Tree-wide stable pack of the masked rows to the buffer head via the
+    :mod:`repro.kernels.reservoir_compact` kernel (Pallas on TPU, jnp oracle
+    elsewhere). Leaves may have any trailing shape (flattened to [cap, D]);
+    rows past ``mask.sum()`` come back zero. THE pack primitive behind every
+    materialization path (:func:`realize_compact` here,
+    :func:`repro.core.api.materialize_view` and through it the distributed
+    ``extract_global`` closures)."""
+    from repro.kernels.reservoir_compact import ops as rc_ops
 
-    Requires 0 < C' <= C (C' == C is an identity shortcut). All branches are
-    computed as slot-index maps and selected with jnp.where, so the whole
-    operation is one gather regardless of branch.
+    def pack(leaf):
+        flat = leaf.reshape(leaf.shape[0], -1)
+        out, _ = rc_ops.reservoir_compact(flat, mask)
+        return out.reshape(leaf.shape)
+
+    return jax.tree_util.tree_map(pack, items)
+
+
+def realize_compact(key: jax.Array, lat: Latent) -> tuple[Any, jax.Array]:
+    """Materialize S: draw the realization mask and pack the selected rows to
+    the buffer head (:func:`compact_items`). Returns ``(items, size)`` where
+    item leaves are [cap, ...] with rows [0, size) the sample and the rest
+    zero. Consumes the key exactly like :func:`realize` (same partial draw).
     """
-    cap = lat.cap
-    cw = _f32(lat.weight)
+    mask, size = realize(key, lat)
+    return compact_items(lat.items, mask), size
+
+
+def downsample_map(
+    key: jax.Array, cap: int, nfull, weight, new_weight, *, exact: bool = False
+) -> jax.Array:
+    """Slot-index map of paper Algorithm 3: ``src[cap]`` (new slot -> old slot)
+    such that gathering the old buffer through ``src`` realizes the
+    C -> C' downsample (Theorem 4.1). Map-only form so the fused R-TBS step
+    (:func:`repro.core.rtbs.step`) can compose several buffer rewrites into a
+    single payload pass; :func:`downsample` is map + gather.
+
+    Randomness defaults to the argsort-free
+    :func:`repro.core.rng.prefix_permutation_fast`; ``exact=True`` restores
+    the exact-but-O(cap log cap) argsort draw (the pre-fused RNG stream --
+    see DESIGN.md Sec. 11 -- used by the reference step and parity tests).
+    """
+    del nfull  # the map depends on floor(weight) only; kept for signature clarity
+    cw = _f32(weight)
     nw = jnp.minimum(_f32(new_weight), cw)
     k, f = floor_frac(cw)
     kp, fp = floor_frac(nw)
 
     kperm, ku = jax.random.split(key)
-    perm = rng.prefix_permutation(kperm, cap, k)  # random order over full slots
+    perm_fn = rng.prefix_permutation if exact else rng.prefix_permutation_fast
+    perm = perm_fn(kperm, cap, k)  # random order over full slots
     u = jax.random.uniform(ku, dtype=jnp.float32)
     slot = jnp.arange(cap, dtype=jnp.int32)
     identity = slot
@@ -151,8 +189,20 @@ def downsample(key: jax.Array, lat: Latent, new_weight) -> Latent:
         jnp.where(kp == k, src_case_eq, src_case_lt),
     )
     # C' == C shortcut (also covers the k==0,f==0 empty edge): identity.
-    src = jnp.where(nw >= cw, identity, src)
+    return jnp.where(nw >= cw, identity, src)
 
+
+def downsample(key: jax.Array, lat: Latent, new_weight, *, exact: bool = False) -> Latent:
+    """Paper Algorithm 3: rescale inclusion probabilities by C'/C (Theorem 4.1).
+
+    Requires 0 < C' <= C (C' == C is an identity shortcut). All branches are
+    computed as slot-index maps (:func:`downsample_map`) and selected with
+    jnp.where, so the whole operation is one gather regardless of branch.
+    """
+    cw = _f32(lat.weight)
+    nw = jnp.minimum(_f32(new_weight), cw)
+    kp, _ = floor_frac(nw)
+    src = downsample_map(key, lat.cap, lat.nfull, lat.weight, new_weight, exact=exact)
     new_items = gather(lat.items, src)
     return Latent(items=new_items, nfull=kp, weight=nw)
 

@@ -53,7 +53,7 @@ def _compact_keep(key, items, count, keep):
     """Keep a uniform random `keep`-subset of the `count` valid items, compacted
     to the buffer head. Returns (items, keep)."""
     cap = jax.tree_util.tree_leaves(items)[0].shape[0]
-    perm = rng.prefix_permutation(key, cap, count)
+    perm = rng.prefix_permutation_fast(key, cap, count)
     return lt.gather(items, perm), keep
 
 
@@ -91,7 +91,7 @@ def ttbs_step(
     items, _ = _compact_keep(k_perm, state.items, state.count, m)
     # line 8-9: accept k ~ Binomial(|B_t|, q) random batch items
     k = rng.binomial(k_acc, bcount, q)
-    picks = rng.prefix_permutation(k_pick, bcap, bcount)
+    picks = rng.prefix_permutation_fast(k_pick, bcap, bcount)
     items, new_count, dropped = _append(items, m, batch_items, picks, k)
     # bookkeeping only (never read by the algorithm): the paper's total weight
     # W_t = sum_j B_j p^{t-j}, so drivers can log W for every scheme
@@ -133,7 +133,7 @@ def brs_step(
     # line 6: keep min(n - M, |S|) old items, add M batch items
     keep = jnp.minimum(jnp.int32(n) - M, state.count)
     items, _ = _compact_keep(k_perm, state.items, state.count, keep)
-    picks = rng.prefix_permutation(k_pick, bcap, bcount)
+    picks = rng.prefix_permutation_fast(k_pick, bcap, bcount)
     items, new_count, dropped = _append(items, keep, batch_items, picks, M)
     return BufferState(
         items=items,

@@ -1,18 +1,56 @@
-"""jit wrapper for reservoir compaction (CPU interpret fallback)."""
+"""jit wrapper for reservoir compaction.
+
+Implementation routing (``impl``): ``None`` auto-selects the compiled Pallas
+kernel on TPU and the pure-jnp oracle elsewhere (the oracle is the fast CPU
+path; ``"interpret"`` runs the kernel body under the Pallas interpreter for
+CPU CI validation, ``"pallas"`` forces compilation).
+
+The backend choice is resolved OUTSIDE the jit boundary and passed as a
+static argument so it participates in the jit cache key. The previous
+wrapper called ``jax.default_backend()`` at trace time inside a jit keyed
+only on ``block``: the first call froze the interpret/compiled decision for
+the process lifetime, silently running interpret-mode kernels after a
+backend flip (or vice versa).
+"""
 from __future__ import annotations
 
 import functools
 
 import jax
+import jax.numpy as jnp
 
-from . import kernel
-
-
-def _on_cpu() -> bool:
-    return jax.default_backend() == "cpu"
+from . import kernel, ref
 
 
-@functools.partial(jax.jit, static_argnames=("block",))
-def reservoir_compact(items, mask, *, block=128):
-    """items [cap, D]; mask [cap] bool -> (compacted [cap, D], count)."""
-    return kernel.compact(items, mask, block=block, interpret=_on_cpu())
+def _auto_impl() -> str:
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+@functools.partial(jax.jit, static_argnames=("block", "impl"))
+def _compact(items, mask, *, block, impl):
+    if impl == "ref":
+        return ref.compact_ref(items, mask)
+    cap, D = items.shape
+    b = min(block, cap)
+    pad = -cap % b
+    if pad:  # kernel requires cap % block == 0; padded rows are masked out
+        items = jnp.concatenate([items, jnp.zeros((pad, D), items.dtype)])
+        mask = jnp.concatenate([mask, jnp.zeros((pad,), mask.dtype)])
+    out, cnt = kernel.compact(
+        items, mask, block=b, interpret=(impl == "interpret")
+    )
+    return out[:cap], cnt
+
+
+def reservoir_compact(items, mask, *, block=128, impl=None):
+    """items [cap, D]; mask [cap] bool -> (compacted [cap, D], count).
+    Stable: surviving rows keep their relative order. ``impl`` as per the
+    module docstring; any ``cap`` is accepted (padded to the block size), and
+    bool / sub-int32 integer payloads are widened for the one-hot matmul and
+    cast back."""
+    if impl is None:
+        impl = _auto_impl()
+    dt = items.dtype
+    wide = dt if jnp.issubdtype(dt, jnp.floating) or dt == jnp.int32 else jnp.int32
+    out, cnt = _compact(items.astype(wide), mask, block=block, impl=impl)
+    return out.astype(dt), cnt

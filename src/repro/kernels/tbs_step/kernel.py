@@ -1,0 +1,65 @@
+"""Fused TBS-step Pallas-TPU kernel: the whole tick's buffer rewrite as one pass.
+
+The sampler step (decay-downsample slot map + batch insert + victim
+replacement, composed by :mod:`repro.core.rtbs` into one ``src`` map) is a
+two-source gather: output slot i pulls from reservoir row ``src[i]`` when
+``src[i] < cap``, else from batch row ``src[i] - cap``. Both sources stay
+resident in VMEM across the sequential grid; each output block builds two
+one-hot selection matrices ([block, cap] / [block, bcap], never leaving VMEM)
+and scatters the rows via MXU matmuls. Payload rows therefore move
+HBM -> VMEM -> HBM exactly once per tick."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(src_ref, items_ref, batch_ref, out_ref, *, cap, bcap):
+    block = out_ref.shape[0]
+    src = src_ref[...][:, 0]                       # [block] int32
+    items = items_ref[...]                         # [cap, D]
+    batch = batch_ref[...]                         # [bcap, D]
+    jj = jax.lax.broadcasted_iota(jnp.int32, (block, cap), 1)
+    sel_i = ((jj == src[:, None]) & (src[:, None] < cap)).astype(items.dtype)
+    kk = jax.lax.broadcasted_iota(jnp.int32, (block, bcap), 1)
+    sel_b = ((kk == (src[:, None] - cap)) & (src[:, None] >= cap)).astype(
+        batch.dtype
+    )
+    out_ref[...] = jax.lax.dot_general(
+        sel_i, items, (((1,), (0,)), ((), ())),
+        preferred_element_type=out_ref.dtype,
+    ) + jax.lax.dot_general(
+        sel_b, batch, (((1,), (0,)), ((), ())),
+        preferred_element_type=out_ref.dtype,
+    )
+
+
+def apply(items, batch, src, *, block=128, interpret=False):
+    """items [cap, D]; batch [bcap, D]; src [capP] int32 (capP >= cap a
+    multiple of ``block``; entries in [0, cap + bcap), rows past cap are
+    wasted work only) -> out [capP, D] with out[i] = items[src[i]] if
+    src[i] < cap else batch[src[i] - cap]."""
+    cap, D = items.shape
+    bcap = batch.shape[0]
+    capP = src.shape[0]
+    b = min(block, capP)
+    assert capP % b == 0 and capP >= cap, (capP, cap, b)
+    nb = capP // b
+    src2 = src.astype(jnp.int32).reshape(capP, 1)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, cap=cap, bcap=bcap),
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((b, 1), lambda bi: (bi, 0)),
+            pl.BlockSpec((cap, D), lambda bi: (0, 0)),
+            pl.BlockSpec((bcap, D), lambda bi: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((b, D), lambda bi: (bi, 0)),
+        out_shape=jax.ShapeDtypeStruct((capP, D), items.dtype),
+        interpret=interpret,
+    )(src2, items, batch)
+    return out

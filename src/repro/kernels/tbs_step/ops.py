@@ -1,0 +1,67 @@
+"""jit wrapper for the fused TBS-step payload pass.
+
+Implementation routing (``impl``):
+
+  * ``None``        -- auto: compiled Pallas kernel on TPU, pure-jnp oracle on
+                       CPU/GPU (the oracle IS the fast path there; interpret
+                       mode is for kernel-body validation, not throughput).
+  * ``"pallas"``    -- compiled kernel (TPU).
+  * ``"interpret"`` -- kernel body under the Pallas interpreter (CPU CI parity
+                       tests execute the real kernel logic this way).
+  * ``"ref"``       -- pure-jnp oracle.
+
+The backend-dependent choice is resolved OUTSIDE the jit boundary and passed
+as a static argument, so it is part of the jit cache key: flipping
+``jax.default_backend()`` between calls re-dispatches instead of silently
+reusing a stale interpret/compiled decision (the bug class fixed in
+:mod:`repro.kernels.reservoir_compact.ops`). When called inside an outer jit
+the choice is baked at the OUTER trace, which owns the cache-key problem.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import kernel, ref
+
+
+def _auto_impl() -> str:
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+@functools.partial(jax.jit, static_argnames=("block", "impl"))
+def _apply2d(items, batch, src, *, block, impl):
+    if impl == "ref":
+        return ref.apply_ref(items, batch, src[: items.shape[0]])
+    cap, D = items.shape
+    capP = src.shape[0]
+    pad = -capP % min(block, max(capP, 1))
+    if pad:
+        src = jnp.concatenate([src, jnp.zeros((pad,), jnp.int32)])
+    out = kernel.apply(
+        items, batch, src, block=block, interpret=(impl == "interpret")
+    )
+    return out[:cap]
+
+
+def tbs_step_apply(items, batch_items, src, *, block=128, impl=None):
+    """Apply the composed tick slot-map ``src[cap]`` (values in
+    [0, cap + bcap): reservoir row, or ``cap +`` batch row) to an item pytree:
+    one two-source payload pass per leaf. Leaves may have any trailing shape
+    (flattened to [cap, D]) and any dtype (sub-int32 ints and bools are
+    widened for the MXU one-hot matmul and cast back)."""
+    if impl is None:
+        impl = _auto_impl()
+
+    def one(leaf, bleaf):
+        cap = leaf.shape[0]
+        dt = leaf.dtype
+        wide = dt if jnp.issubdtype(dt, jnp.floating) else jnp.int32
+        flat = leaf.reshape(cap, -1).astype(wide)
+        bflat = bleaf.reshape(bleaf.shape[0], -1).astype(wide)
+        out = _apply2d(flat, bflat, src, block=block, impl=impl)
+        return out.reshape(leaf.shape).astype(dt)
+
+    return jax.tree_util.tree_map(one, items, batch_items)

@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the fused TBS-step payload pass (two-source gather)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def apply_ref(items, batch, src):
+    """items [cap, D]; batch [bcap, D]; src [cap] int32 with values in
+    [0, cap + bcap) -> out [cap, D] where out[i] = items[src[i]] when
+    src[i] < cap else batch[src[i] - cap]."""
+    cap = items.shape[0]
+    bcap = batch.shape[0]
+    from_batch = src >= cap
+    gi = jnp.take(items, jnp.clip(src, 0, cap - 1), axis=0)
+    gb = jnp.take(batch, jnp.clip(src - cap, 0, bcap - 1), axis=0)
+    return jnp.where(from_batch[:, None], gb, gi)

@@ -104,7 +104,8 @@ def run_sharded(args, adapter, stream, sampler):
 
     mesh = make_data_mesh(S)
     run = make_sharded_run_loop(sampler, adapter, mesh,
-                                retrain_every=args.retrain_every)
+                                retrain_every=args.retrain_every,
+                                superbatch=args.superbatch)
     print(f"[train] sharded {args.scheme} loop: {S} shards, "
           f"{args.ticks} ticks, one fused program", flush=True)
     state, model_state, trace = run(jax.random.key(args.seed), batches,
@@ -140,6 +141,10 @@ def main(argv=None):
     ap.add_argument("--lam", type=float, default=0.07)
     ap.add_argument("--seq-len", type=int, default=64)
     ap.add_argument("--retrain-every", type=int, default=5)
+    ap.add_argument("--superbatch", type=int, default=None,
+                    help="manage-loop chunk size G (divisor of "
+                         "--retrain-every; default: 8 on TPU, 1 elsewhere "
+                         "-- DESIGN.md Sec. 11)")
     ap.add_argument("--retrain-steps", type=int, default=8)
     ap.add_argument("--train-batch", type=int, default=16)
     ap.add_argument("--drift", default="periodic", choices=["periodic", "single", "none"])

@@ -99,6 +99,100 @@ def _check_sharded(sampler: Sampler) -> None:
         )
 
 
+def _effective_superbatch(superbatch: int | None, retrain_every: int) -> int:
+    """Resolve the superbatch chunk size G: the largest divisor of
+    ``retrain_every`` not exceeding the requested size. G must divide
+    ``retrain_every`` so that within a G-tick chunk only the LAST tick can be
+    a retrain tick -- the first G-1 ticks then compile with no fit branch at
+    all (DESIGN.md Sec. 11).
+
+    Default (None): 8 on TPU, 1 elsewhere. On CPU the XLA while-loop already
+    optimizes the small per-tick body best and a per-tick ``lax.cond`` is
+    free, so unrolling REGRESSES throughput ~2x (measured, recorded in
+    BENCH_manage_loop.json's ``manage_loop_fused_sb8`` row); on TPU the
+    chunked body amortizes per-iteration dispatch and carry double-buffering.
+    """
+    if superbatch is None:
+        superbatch = 8 if jax.default_backend() == "tpu" else 1
+    want = max(int(superbatch), 1)
+    g = min(want, retrain_every)
+    while retrain_every % g:
+        g -= 1
+    return g
+
+
+def _make_fast_tick(sampler: Sampler, model: ModelAdapter) -> Callable:
+    """The non-retrain fast path of a superbatched chunk: evaluate + step +
+    the payload-free size metric, with NO fit conditional in the trace.
+    Bit-identical to :func:`make_manage_step`'s tick on ticks where
+    ``(t+1) % retrain_every != 0`` (same tick_keys, same op order)."""
+
+    def fast(key, t, state, params, batch_items, bcount):
+        k_step, k_extract, _ = tick_keys(key, t)
+        metric = model.evaluate(params, batch_items, bcount)
+        state = sampler.step(k_step, state, batch_items, bcount)
+        return state, {"metric": metric, "size": sampler.size(k_extract, state)}
+
+    return fast
+
+
+def _superbatched_scan(tick: Callable, fast: Callable, G: int) -> Callable:
+    """The chunked-scan skeleton shared by the local and sharded loops:
+    ``scan(key, state0, params0, batches, bcounts) -> (state, params, trace)``.
+
+    Scans T//G chunks of G ticks; within a chunk the first G-1 ticks run the
+    cond-free ``fast`` path (G divides the retrain cadence, so only the last
+    tick of a chunk can retrain -- :func:`_effective_superbatch`) and the
+    last runs the full ``tick``. Tail ticks (T % G) run ``tick`` unrolled
+    after the scan. Bit-identical to the G=1 per-tick scan for any G."""
+
+    def scan(key, state0, params0, batches, bcounts):
+        T = bcounts.shape[0]
+        nchunks = T // G
+        Tm = nchunks * G
+
+        def at(tree, idx):
+            return jax.tree_util.tree_map(lambda a: a[idx], tree)
+
+        def chunk(a):
+            return a[:Tm].reshape((nchunks, G) + a.shape[1:])
+
+        def chunk_body(carry, inp):
+            state, params = carry
+            ct, cb, cc = inp
+            ms = []
+            for g in range(G - 1):       # unrolled, no retrain conditional
+                state, m = fast(key, ct[g], state, params, at(cb, g), cc[g])
+                ms.append(m)
+            state, params, m = tick(key, ct[G - 1], state, params,
+                                    at(cb, G - 1), cc[G - 1])
+            ms.append(m)
+            metrics = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *ms)
+            return (state, params), metrics
+
+        (state, params), trace = jax.lax.scan(
+            chunk_body, (state0, params0),
+            (chunk(jnp.arange(T, dtype=jnp.int32)),
+             jax.tree_util.tree_map(chunk, batches), chunk(bcounts)),
+        )
+        trace = jax.tree_util.tree_map(
+            lambda a: a.reshape((Tm,) + a.shape[2:]), trace
+        )
+        tails = []
+        for t in range(Tm, T):
+            state, params, m = tick(key, jnp.int32(t), state, params,
+                                    at(batches, t), bcounts[t])
+            tails.append(m)
+        if tails:
+            tailm = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *tails)
+            trace = jax.tree_util.tree_map(
+                lambda a, b: jnp.concatenate([a, b]), trace, tailm
+            )
+        return state, params, trace
+
+    return scan
+
+
 def make_manage_step(sampler: Sampler, model: ModelAdapter, *,
                      retrain_every: int = 1) -> Callable:
     """One tick of the loop: ``(key, t, state, params, batch, bcount) ->
@@ -153,7 +247,8 @@ def _memoized(kind: str, key: tuple, build: Callable[[], Callable]) -> Callable:
 
 
 def make_run_loop(sampler: Sampler, model: ModelAdapter, *,
-                  retrain_every: int = 1) -> Callable:
+                  retrain_every: int = 1,
+                  superbatch: int | None = None) -> Callable:
     """Compile the full-stream loop once.
 
     Returns ``run(key, batches, bcounts) -> (state, params, trace)`` where
@@ -161,51 +256,50 @@ def make_run_loop(sampler: Sampler, model: ModelAdapter, *,
     ``trace`` holds per-tick {"metric" f32[T], "size" i32[T]}. The whole
     stream is consumed by ONE jitted ``lax.scan`` -- no per-tick dispatch.
 
-    Memoized on ``(sampler, model, retrain_every)``: repeat calls return the
-    same compiled callable.
+    ``superbatch`` coalesces G consecutive ticks into one chunked scan body
+    (G = largest divisor of ``retrain_every`` <= superbatch; default: 8 on
+    TPU, 1 elsewhere -- see :func:`_effective_superbatch`): the first G-1
+    ticks of each chunk are unrolled WITHOUT the retrain conditional, so the
+    non-retrain fast path pays scan bookkeeping (carry double-buffering,
+    per-iteration dispatch) once per chunk instead of once per tick. Results
+    are bit-identical for any G (asserted in tests).
+
+    Memoized on ``(sampler, model, retrain_every, superbatch)``: repeat calls
+    return the same compiled callable.
     """
     return _memoized(
-        "run_loop", (sampler, model, retrain_every),
-        lambda: _build_run_loop(sampler, model, retrain_every),
+        "run_loop", (sampler, model, retrain_every, superbatch),
+        lambda: _build_run_loop(sampler, model, retrain_every, superbatch),
     )
 
 
 def _build_run_loop(sampler: Sampler, model: ModelAdapter,
-                    retrain_every: int) -> Callable:
+                    retrain_every: int, superbatch: int | None) -> Callable:
     tick = make_manage_step(sampler, model, retrain_every=retrain_every)
+    fast = _make_fast_tick(sampler, model)
+    scan = _superbatched_scan(
+        tick, fast, _effective_superbatch(superbatch, retrain_every)
+    )
 
     @jax.jit
     def run(key, batches, bcounts):
-        state0 = sampler.init(item_proto(batches))
-        params0 = model.init()
-        T = bcounts.shape[0]
-
-        def body(carry, inp):
-            state, params = carry
-            t, batch_items, bcount = inp
-            state, params, metrics = tick(key, t, state, params,
-                                          batch_items, bcount)
-            return (state, params), metrics
-
-        (state, params), trace = jax.lax.scan(
-            body, (state0, params0),
-            (jnp.arange(T, dtype=jnp.int32), batches, bcounts),
-        )
-        return state, params, trace
+        return scan(key, sampler.init(item_proto(batches)), model.init(),
+                    batches, bcounts)
 
     return run
 
 
 def run_loop(key: jax.Array, sampler: Sampler, model: ModelAdapter,
-             batches: Any, bcounts: jax.Array, *, retrain_every: int = 1):
+             batches: Any, bcounts: jax.Array, *, retrain_every: int = 1,
+             superbatch: int | None = None):
     """One-shot convenience wrapper over :func:`make_run_loop`."""
-    return make_run_loop(sampler, model, retrain_every=retrain_every)(
-        key, batches, bcounts
-    )
+    return make_run_loop(sampler, model, retrain_every=retrain_every,
+                         superbatch=superbatch)(key, batches, bcounts)
 
 
 def make_run_farm(sampler: Sampler, model: ModelAdapter, *,
-                  retrain_every: int = 1) -> Callable:
+                  retrain_every: int = 1,
+                  superbatch: int | None = None) -> Callable:
     """Monte-Carlo farm: ``farm(key, trials, batches, bcounts) -> trace``.
 
     ``vmap`` of the fused loop over ``trials`` independent sampler/model
@@ -216,7 +310,8 @@ def make_run_farm(sampler: Sampler, model: ModelAdapter, *,
     """
 
     def build():
-        run = make_run_loop(sampler, model, retrain_every=retrain_every)
+        run = make_run_loop(sampler, model, retrain_every=retrain_every,
+                            superbatch=superbatch)
 
         def farm(key, trials: int, batches, bcounts):
             keys = jax.random.split(key, trials)
@@ -225,16 +320,17 @@ def make_run_farm(sampler: Sampler, model: ModelAdapter, *,
 
         return farm
 
-    return _memoized("run_farm", (sampler, model, retrain_every), build)
+    return _memoized(
+        "run_farm", (sampler, model, retrain_every, superbatch), build
+    )
 
 
 def run_farm(key: jax.Array, trials: int, sampler: Sampler,
              model: ModelAdapter, batches: Any, bcounts: jax.Array, *,
-             retrain_every: int = 1):
+             retrain_every: int = 1, superbatch: int | None = None):
     """One-shot convenience wrapper over :func:`make_run_farm`."""
-    return make_run_farm(sampler, model, retrain_every=retrain_every)(
-        key, trials, batches, bcounts
-    )
+    return make_run_farm(sampler, model, retrain_every=retrain_every,
+                         superbatch=superbatch)(key, trials, batches, bcounts)
 
 
 # ---------------------------------------------------------------------------
@@ -285,6 +381,27 @@ def _make_sharded_tick(sampler: Sampler, model: ModelAdapter,
     return tick
 
 
+def _make_sharded_fast_tick(sampler: Sampler, model: ModelAdapter) -> Callable:
+    """Sharded analogue of :func:`_make_fast_tick`: the per-shard tick without
+    the retrain conditional (no extract_global all_gather in the trace) --
+    the superbatched chunk's non-retrain fast path."""
+    axis = distributed.AXIS
+
+    def fast(key, t, state, params, batch_items, bcount):
+        k_step, k_extract, _ = tick_keys(key, t)
+        m_s = model.evaluate(params, batch_items, bcount)
+        w_s = jnp.asarray(bcount, jnp.float32)
+        num = jax.lax.psum(jnp.where(bcount > 0, m_s, 0.0) * w_s, axis)
+        den = jax.lax.psum(w_s, axis)
+        metric = jnp.where(den > 0, num / jnp.maximum(den, 1.0),
+                           jnp.float32(jnp.nan))
+        state = sampler.step(k_step, state, batch_items, bcount)
+        size = sampler.size_global(k_extract, state)
+        return state, {"metric": metric, "size": size}
+
+    return fast
+
+
 def _sharded_in_specs(axis):
     from jax.sharding import PartitionSpec as P
 
@@ -295,7 +412,8 @@ def _sharded_in_specs(axis):
 
 
 def make_sharded_run_loop(sampler: Sampler, model: ModelAdapter, mesh, *,
-                          retrain_every: int = 1) -> Callable:
+                          retrain_every: int = 1,
+                          superbatch: int | None = None) -> Callable:
     """Compile the paper's model-management loop for a sharded sampler.
 
     Returns ``run(key, batches, bcounts) -> (state, params, trace)``:
@@ -315,14 +433,17 @@ def make_sharded_run_loop(sampler: Sampler, model: ModelAdapter, mesh, *,
     ``shard_map`` over the ``data`` axis, so reservoir shards stay resident on
     their devices for the entire stream: per tick there is exactly one scalar
     psum (|B_t|) plus the sampler's own tiny count collectives, and payloads
-    cross shards only inside ``extract_global`` on retrain ticks. Memoized on
-    ``(sampler, model, mesh, retrain_every)``.
+    cross shards only inside ``extract_global`` on retrain ticks.
+    ``superbatch`` chunks the scan exactly as in :func:`make_run_loop` (the
+    non-retrain fast ticks additionally drop the retrain-gated all_gather
+    from their trace). Memoized on ``(sampler, model, mesh, retrain_every,
+    superbatch)``.
     """
     _check_sharded(sampler)
     return _memoized(
-        "sharded_run_loop", (sampler, model, mesh, retrain_every),
+        "sharded_run_loop", (sampler, model, mesh, retrain_every, superbatch),
         lambda: jax.jit(distributed.shard_map(
-            _sharded_loop_body(sampler, model, retrain_every),
+            _sharded_loop_body(sampler, model, retrain_every, superbatch),
             mesh=mesh,
             in_specs=_sharded_in_specs(distributed.AXIS),
             out_specs=_replicated_out_specs(),
@@ -338,27 +459,22 @@ def _replicated_out_specs():
 
 
 def _sharded_loop_body(sampler: Sampler, model: ModelAdapter,
-                       retrain_every: int) -> Callable:
-    """Per-shard whole-stream program: scan of the sharded tick."""
-    tick = _make_sharded_tick(sampler, model, retrain_every)
+                       retrain_every: int,
+                       superbatch: int | None = None) -> Callable:
+    """Per-shard whole-stream program: superbatched scan of the sharded tick
+    (the :func:`_superbatched_scan` skeleton, same chunking contract as
+    :func:`_build_run_loop`)."""
+    scan = _superbatched_scan(
+        _make_sharded_tick(sampler, model, retrain_every),
+        _make_sharded_fast_tick(sampler, model),
+        _effective_superbatch(superbatch, retrain_every),
+    )
 
     def loop(key, batches, bcounts):
         # per-shard views: batch leaves [T, bcap_s, ...], bcounts [T, 1]
-        bcounts = bcounts[:, 0]
-        state0 = sampler.init(item_proto(batches))
-        params0 = model.init()
-        T = bcounts.shape[0]
-
-        def body(carry, inp):
-            state, params = carry
-            t, batch_items, bcount = inp
-            state, params, metrics = tick(key, t, state, params,
-                                          batch_items, bcount)
-            return (state, params), metrics
-
-        (state, params), trace = jax.lax.scan(
-            body, (state0, params0),
-            (jnp.arange(T, dtype=jnp.int32), batches, bcounts),
+        state, params, trace = scan(
+            key, sampler.init(item_proto(batches)), model.init(),
+            batches, bcounts[:, 0],
         )
         return distributed.gather_tree(state), params, trace
 
@@ -377,6 +493,11 @@ def make_sharded_manage_step(sampler: Sampler, model: ModelAdapter, mesh, *,
     [S*bcap_s, ...], ``bcount_t`` is [S]. This is the unfused comparison
     point: per-tick dispatch + the snapshot all_gather every tick, which the
     fused scan amortizes away (see benchmarks/manage_loop.py).
+
+    The ``state_g`` snapshot is DONATED on backends that support donation
+    (not CPU): the driver round-trips it every dispatch, so donation lets
+    XLA reuse the reservoir buffers in place instead of double-buffering
+    them -- do not reuse a snapshot after passing it in.
     """
     _check_sharded(sampler)
 
@@ -393,11 +514,12 @@ def make_sharded_manage_step(sampler: Sampler, model: ModelAdapter, mesh, *,
                                           batch_items, bcount[0])
             return distributed.gather_tree(state), params, metrics
 
+        donate = () if jax.default_backend() == "cpu" else (2,)
         return jax.jit(distributed.shard_map(
             step, mesh=mesh,
             in_specs=(P(), P(), P(), P(), P(axis), P(axis)),
             out_specs=_replicated_out_specs(),
-        ))
+        ), donate_argnums=donate)
 
     return _memoized(
         "sharded_manage_step", (sampler, model, mesh, retrain_every), build
@@ -405,7 +527,8 @@ def make_sharded_manage_step(sampler: Sampler, model: ModelAdapter, mesh, *,
 
 
 def make_sharded_run_farm(sampler: Sampler, model: ModelAdapter, mesh, *,
-                          retrain_every: int = 1) -> Callable:
+                          retrain_every: int = 1,
+                          superbatch: int | None = None) -> Callable:
     """Monte-Carlo farm of the sharded loop: ``farm(key, trials, batches,
     bcounts) -> (states, params, trace)`` with a leading [trials] axis on
     every output leaf.
@@ -418,7 +541,7 @@ def make_sharded_run_farm(sampler: Sampler, model: ModelAdapter, mesh, *,
     _check_sharded(sampler)
 
     def build():
-        loop = _sharded_loop_body(sampler, model, retrain_every)
+        loop = _sharded_loop_body(sampler, model, retrain_every, superbatch)
 
         def farm_shard(keys, batches, bcounts):
             return jax.vmap(lambda k: loop(k, batches, bcounts))(keys)
@@ -436,7 +559,8 @@ def make_sharded_run_farm(sampler: Sampler, model: ModelAdapter, mesh, *,
         return farm
 
     return _memoized(
-        "sharded_run_farm", (sampler, model, mesh, retrain_every), build
+        "sharded_run_farm", (sampler, model, mesh, retrain_every, superbatch),
+        build
     )
 
 

@@ -129,16 +129,20 @@ def test_ssd_model_path_matches_kernel():
         (128, 16, 1.0, 32, jnp.float32),    # keep everything
         (512, 4, 0.25, 128, jnp.int32),     # int payload (token ids)
         (256, 8, 0.9, 64, jnp.bfloat16),
+        (301, 8, 0.5, 128, jnp.float32),    # cap not a block multiple (padded)
     ],
 )
 def test_reservoir_compact_matches_ref(cap, D, frac, block, dtype):
+    """impl="interpret" executes the kernel BODY on CPU (the auto route is
+    the jnp oracle off-TPU, which would test ref against itself)."""
     k1, k2 = jax.random.split(jax.random.key(4))
     if dtype == jnp.int32:
         items = jax.random.randint(k1, (cap, D), 0, 1000, jnp.int32)
     else:
         items = jax.random.normal(k1, (cap, D), dtype)
     mask = jax.random.bernoulli(k2, frac, (cap,))
-    got, cnt = rc_ops.reservoir_compact(items, mask, block=block)
+    got, cnt = rc_ops.reservoir_compact(items, mask, block=block,
+                                        impl="interpret")
     want, cnt_ref = rc_ref.compact_ref(items, mask)
     assert int(cnt) == int(cnt_ref) == int(np.asarray(mask).sum())
     np.testing.assert_array_equal(
@@ -158,7 +162,8 @@ def test_reservoir_compact_property(cap_blocks, d, seed):
     rs = np.random.RandomState(seed)
     items = jnp.asarray(rs.randint(0, 10**6, (cap, d)), jnp.int32)
     mask = jnp.asarray(rs.rand(cap) < rs.rand())
-    got, cnt = rc_ops.reservoir_compact(items, mask, block=64)
+    got, cnt = rc_ops.reservoir_compact(items, mask, block=64,
+                                        impl="interpret")
     want = np.asarray(items)[np.asarray(mask)]
     assert int(cnt) == want.shape[0]
     np.testing.assert_array_equal(np.asarray(got[: int(cnt)]), want)

@@ -1,0 +1,314 @@
+"""The fused sampler hot path (DESIGN.md Sec. 11): kernel parity, argsort-free
+RNG quality, fused-vs-reference R-TBS equivalence, superbatched manage loop.
+
+Validation chain for the Pallas path on CPU CI:
+
+  1. the ``tbs_step`` kernel body (interpret mode) == the jnp oracle on
+     randomized (cap, bcap, D, dtype) grids -- the payload pass is exact;
+  2. a multi-tick R-TBS stream driven with ``impl="interpret"`` (kernel body)
+     is BIT-IDENTICAL to ``impl="ref"`` (the default off-TPU route) -- the
+     fused step's states don't depend on the apply implementation;
+  3. the Theorem 4.1/4.2 statistical checks run against the fused step
+     (tests/test_core_sampling.py exercises them on the default route; a
+     re-run lives here as an explicit marker). By (1)+(2) those guarantees
+     extend verbatim to the compiled Pallas route.
+"""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import latent as lt
+from repro.core import rng, rtbs
+from repro.core.api import SampleView, make_sampler, materialize_view
+from repro.kernels.tbs_step import ops as ts_ops, ref as ts_ref
+
+PROTO = jax.ShapeDtypeStruct((), jnp.int32)
+
+
+def keys(seed, num):
+    return jax.random.split(jax.random.key(seed), num)
+
+
+def _id_stream(batch_sizes, bcap):
+    T = len(batch_sizes)
+    batches = np.zeros((T, bcap), np.int32)
+    for t, b in enumerate(batch_sizes):
+        batches[t, :b] = 1000 * (t + 1) + np.arange(b)
+    return jnp.asarray(batches), jnp.asarray(batch_sizes, jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# 1. kernel parity (interpret mode executes the kernel body on CPU)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize(
+    "cap,bcap,D,block,dtype",
+    [
+        (128, 32, 8, 64, jnp.float32),
+        (256, 64, 4, 128, jnp.int32),
+        (65, 16, 8, 64, jnp.float32),     # cap not a block multiple (padded)
+        (128, 128, 16, 32, jnp.bfloat16),
+        (33, 8, 1, 128, jnp.int32),       # n+1-style odd cap, scalar payload
+    ],
+)
+def test_tbs_step_kernel_matches_ref(cap, bcap, D, block, dtype):
+    k1, k2, k3 = jax.random.split(jax.random.key(0), 3)
+    if dtype == jnp.int32:
+        items = jax.random.randint(k1, (cap, D), 0, 10**6, jnp.int32)
+        batch = jax.random.randint(k2, (bcap, D), 0, 10**6, jnp.int32)
+    else:
+        items = jax.random.normal(k1, (cap, D), dtype)
+        batch = jax.random.normal(k2, (bcap, D), dtype)
+    # random two-source map: mixes reservoir rows and batch rows
+    src = jax.random.randint(k3, (cap,), 0, cap + bcap, jnp.int32)
+    got = ts_ops.tbs_step_apply(items, batch, src, block=block,
+                                impl="interpret")
+    want = ts_ref.apply_ref(items, batch, src)
+    np.testing.assert_array_equal(
+        np.asarray(got, np.float32), np.asarray(want, np.float32)
+    )
+
+
+def test_tbs_step_apply_pytree_and_dtypes():
+    """The ops wrapper flattens arbitrary leaf shapes and widens bool/int8."""
+    cap, bcap = 16, 4
+    items = {
+        "x": jnp.arange(cap * 6, dtype=jnp.float32).reshape(cap, 2, 3),
+        "y": jnp.arange(cap, dtype=jnp.int8),
+        "m": jnp.zeros((cap,), bool),
+    }
+    batch = {
+        "x": -jnp.ones((bcap, 2, 3), jnp.float32),
+        "y": -jnp.ones((bcap,), jnp.int8),
+        "m": jnp.ones((bcap,), bool),
+    }
+    src = jnp.array([cap, cap + 1, 0, 5] + list(range(4, cap)), jnp.int32)
+    out = ts_ops.tbs_step_apply(items, batch, src, impl="ref")
+    assert out["y"].dtype == jnp.int8 and out["m"].dtype == bool
+    np.testing.assert_array_equal(np.asarray(out["y"][:4]), [-1, -1, 0, 5])
+    assert bool(out["m"][0]) and not bool(out["m"][2])
+    np.testing.assert_array_equal(np.asarray(out["x"][2]),
+                                  np.asarray(items["x"][0]))
+
+
+# ---------------------------------------------------------------------------
+# 2. argsort-free RNG: same structural contract as prefix_permutation
+# ---------------------------------------------------------------------------
+class TestPrefixPermutationFast:
+    def test_structure(self):
+        cap, nvalid = 12, 7
+        perms = jax.vmap(
+            lambda kk: rng.prefix_permutation_fast(kk, cap, nvalid)
+        )(keys(4, 8000))
+        perms = np.asarray(perms)
+        head = np.sort(perms[:, :nvalid], axis=1)
+        assert (head == np.arange(nvalid)).all()
+        assert (perms[:, nvalid:] == np.arange(nvalid, cap)).all()
+        for v in range(nvalid):
+            emp = float(np.mean(perms[:, 0] == v))
+            assert abs(emp - 1 / nvalid) < 0.02
+
+    def test_tiny_domain_marginals(self):
+        """Swap-or-not bias on a 3-element domain stays below MC noise."""
+        n = 3
+        perms = np.asarray(
+            jax.vmap(lambda kk: rng.prefix_permutation_fast(kk, 4, n))(
+                keys(9, 60000)
+            )
+        )
+        for pos in range(n):
+            for v in range(n):
+                emp = float(np.mean(perms[:, pos] == v))
+                assert abs(emp - 1 / n) < 0.01, (pos, v, emp)
+
+    def test_prefix_k(self):
+        """k-prefix evaluation agrees with the full evaluation."""
+        cap, nvalid, k = 64, 50, 16
+        kk = jax.random.key(3)
+        full = rng.prefix_permutation_fast(kk, cap, nvalid)
+        pre = rng.prefix_permutation_fast(kk, cap, nvalid, k=k)
+        np.testing.assert_array_equal(np.asarray(full[:k]), np.asarray(pre))
+
+    def test_traced_n_jit(self):
+        f = jax.jit(lambda kk, n: rng.prefix_permutation_fast(kk, 32, n))
+        out = np.asarray(f(jax.random.key(0), jnp.int32(10)))
+        assert sorted(out[:10].tolist()) == list(range(10))
+        assert (out[10:] == np.arange(10, 32)).all()
+        assert sorted(np.asarray(f(jax.random.key(0), jnp.int32(0))).tolist()) \
+            == list(range(32))
+
+
+# ---------------------------------------------------------------------------
+# 3. fused step vs reference step
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize(
+    "batch_sizes,lam,n",
+    [
+        ([12, 0, 0, 3, 9, 1, 5, 7, 16, 2, 0, 8], 0.07, 8),
+        ([4, 4, 4, 4, 4, 4, 4, 4], 0.3, 8),
+        ([6, 6, 0, 0, 0, 0, 6, 2], 0.8, 8),       # heavy decay, undershoots
+        ([16, 16, 16, 16, 16, 16], 0.1, 24),      # saturates, stays saturated
+    ],
+)
+def test_fused_matches_ref_scalars_and_validity(batch_sizes, lam, n):
+    """C_t/W_t trajectories are deterministic: fused and reference agree
+    exactly; and the fused valid region only ever holds genuinely streamed,
+    distinct items (no fabrication, no duplication)."""
+    bcap = max(batch_sizes)
+    batches, bcounts = _id_stream(batch_sizes, bcap)
+    st0 = rtbs.init(PROTO, n)
+    fin_f, tr_f = rtbs.run_stream(jax.random.key(0), st0, batches, bcounts,
+                                  n=n, lam=lam)
+    fin_r, tr_r = rtbs.run_stream(jax.random.key(0), st0, batches, bcounts,
+                                  n=n, lam=lam, use_ref=True)
+    np.testing.assert_allclose(np.asarray(tr_f["C"]), np.asarray(tr_r["C"]),
+                               rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(tr_f["W"]), np.asarray(tr_r["W"]),
+                               rtol=1e-5)
+    k = int(fin_f.lat.nfull)
+    live = k + (1 if float(fin_f.lat.weight) % 1.0 > 1e-5 else 0)
+    got = np.asarray(fin_f.lat.items)[:live]
+    T = len(batch_sizes)
+    assert ((got >= 1000) & (got < 1000 * (T + 1))).all(), got
+    assert len(set(got.tolist())) == len(got), got
+
+
+def test_fused_interpret_kernel_bit_identical_to_ref_apply():
+    """The Pallas kernel route (interpret mode on CPU) produces bit-identical
+    sampler states to the jnp-apply route: the statistical guarantees checked
+    on the default route extend to the kernel path verbatim."""
+    batch_sizes = [10, 3, 0, 14, 8, 5]
+    batches, bcounts = _id_stream(batch_sizes, max(batch_sizes))
+    n, lam = 12, 0.25
+    st_i = st_r = rtbs.init(PROTO, n)
+    for t in range(len(batch_sizes)):
+        kt = jax.random.fold_in(jax.random.key(7), t)
+        bt = batches[t]
+        st_i = rtbs.step(kt, st_i, bt, bcounts[t], n=n, lam=lam,
+                         impl="interpret")
+        st_r = rtbs.step(kt, st_r, bt, bcounts[t], n=n, lam=lam, impl="ref")
+        for a, b in zip(jax.tree_util.tree_leaves(st_i),
+                        jax.tree_util.tree_leaves(st_r)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_fused_step_theorem_4_2():
+    """Theorem 4.2 re-run against the FUSED path: Pr[i in S_t] ==
+    (C_t/W_t) w_t(i) for every batch age (the fuller grids live in
+    tests/test_core_sampling.py, which drives the same fused default)."""
+    batch_sizes, lam, n = [4, 4, 4, 4, 4, 4, 4, 4], 0.3, 8
+    T = len(batch_sizes)
+    batches, bcounts = _id_stream(batch_sizes, max(batch_sizes))
+
+    def one(kk):
+        st = rtbs.init(PROTO, n)
+        k_run, k_real = jax.random.split(kk)
+        st, _ = rtbs.run_stream(k_run, st, batches, bcounts, n=n, lam=lam)
+        mask, _ = lt.realize(k_real, st.lat)
+        batch_of = st.lat.items // 1000
+        counts = jnp.zeros((T + 1,), jnp.float32).at[batch_of].add(
+            mask.astype(jnp.float32)
+        )
+        return counts[1:]
+
+    counts = jax.vmap(one)(keys(0, 12000))
+    probs = np.asarray(counts.mean(axis=0)) / 4
+    w = 0.0
+    ws = []
+    for b in batch_sizes:
+        w = math.exp(-lam) * w + b
+        ws.append(w)
+    C_T, W_T = min(n, ws[-1]), ws[-1]
+    for j in range(T):
+        expect = (C_T / W_T) * math.exp(-lam * (T - 1 - j))
+        assert abs(probs[j] - expect) < 0.025, (j, probs[j], expect)
+
+
+def test_fused_downsample_theorem_4_1():
+    """Theorem 4.1 against the argsort-free downsample map (the grid version
+    lives in tests/test_core_sampling.py)."""
+    c, cp, cap = 5.6, 3.2, 10
+    k = math.floor(c)
+    ids = jnp.arange(cap, dtype=jnp.int32)
+    base = lt.Latent(items=ids, nfull=jnp.int32(k), weight=jnp.float32(c))
+
+    def one(kk):
+        k1, k2 = jax.random.split(kk)
+        out = lt.downsample(k1, base, jnp.float32(cp))
+        mask, _ = lt.realize(k2, out)
+        member = jnp.zeros((cap,), jnp.float32)
+        return member.at[out.items].add(mask.astype(jnp.float32))
+
+    member = np.asarray(jax.vmap(one)(keys(1, 20000)).mean(axis=0))
+    scale = cp / c
+    for i in range(k):
+        assert abs(member[i] - scale) < 0.02, (i, member[i], scale)
+    assert abs(member[k] - scale * (c - k)) < 0.02
+
+
+# ---------------------------------------------------------------------------
+# 4. superbatched manage loop: bit-identical for any chunk size
+# ---------------------------------------------------------------------------
+def test_superbatch_bit_identical():
+    from repro.data.streams import LinRegStream
+    from repro.manage import make_model, make_run_loop, materialize_stream
+    from repro.manage.loop import _effective_superbatch
+
+    assert _effective_superbatch(None, 1) == 1
+    assert _effective_superbatch(8, 4) == 4
+    assert _effective_superbatch(8, 12) == 6      # largest divisor <= 8
+    assert _effective_superbatch(3, 4) == 2
+    assert _effective_superbatch(5, 7) == 1
+
+    sampler = make_sampler("rtbs", n=40, lam=0.15)
+    model = make_model("linreg", dim=2)
+    batches, bcounts = materialize_stream(LinRegStream(seed=0), 11,
+                                          batch_size=16)
+    key = jax.random.key(3)
+    outs = []
+    for sb in (1, 2, 4):   # T=11, retrain_every=4: chunked scan + tail ticks
+        st, params, trace = make_run_loop(
+            sampler, model, retrain_every=4, superbatch=sb
+        )(key, batches, bcounts)
+        outs.append((st, params, trace))
+    for st, params, trace in outs[1:]:
+        for a, b in zip(jax.tree_util.tree_leaves((st, params, trace)),
+                        jax.tree_util.tree_leaves(outs[0])):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# 5. sample materialization via reservoir_compact
+# ---------------------------------------------------------------------------
+def test_materialize_view_packs_scattered_mask():
+    cap = 21
+    items = {"x": jnp.arange(cap * 2, dtype=jnp.float32).reshape(cap, 2),
+             "y": jnp.arange(cap, dtype=jnp.int32)}
+    mask = jnp.asarray(np.arange(cap) % 3 == 1)   # scattered membership
+    size = jnp.int32(int(np.asarray(mask).sum()))
+    dense = materialize_view(SampleView(items=items, mask=mask, size=size))
+    assert int(dense.mask.sum()) == int(size)
+    assert bool(dense.mask[: int(size)].all())
+    got = np.asarray(dense.items["y"][: int(size)])
+    np.testing.assert_array_equal(got, np.arange(cap)[np.asarray(mask)])
+    np.testing.assert_array_equal(
+        np.asarray(dense.items["x"][: int(size)]),
+        np.asarray(items["x"])[np.asarray(mask)],
+    )
+
+
+def test_latent_realize_compact_matches_realize():
+    cap = 9
+    lat = lt.Latent(items=jnp.arange(cap, dtype=jnp.int32) + 1,
+                    nfull=jnp.int32(5), weight=jnp.float32(5.7))
+    for s in range(8):
+        kk = jax.random.key(s)
+        mask, size = lt.realize(kk, lat)
+        packed, size2 = lt.realize_compact(kk, lat)
+        assert int(size) == int(size2)   # same key -> same partial draw
+        np.testing.assert_array_equal(
+            np.asarray(packed[: int(size)]),
+            np.asarray(lat.items)[np.asarray(mask)],
+        )
