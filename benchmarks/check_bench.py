@@ -17,6 +17,8 @@ from .common import BENCH_SCHEMA_KEYS, REPO_ROOT
 REQUIRED_ROW_FIELDS = {
     "sampler_step": ("scheme", "cap", "impl", "items_per_s", "steps_per_s"),
     "manage_loop": ("ticks_per_s",),
+    "decay_sweep": ("scenario", "decay", "mean_loss", "post_shift_loss",
+                    "es10"),
 }
 
 
@@ -43,6 +45,15 @@ def check_file(path: pathlib.Path) -> list[str]:
     for field in REQUIRED_ROW_FIELDS.get(bench, ()):
         if not any(field in r for r in rows):
             errors.append(f"{path.name}: no row carries {field!r}")
+    # the decay sweep must cover the three schedule families it exists to
+    # compare (static exponential grid, polynomial, closed-loop adaptive)
+    if bench == "decay_sweep":
+        for fam in ("static_lam", "poly_b", "adaptive"):
+            if not any(fam in r.get("name", "") for r in rows):
+                errors.append(f"{path.name}: no {fam}* rows")
+        adaptive = [r for r in rows if "adaptive" in r.get("name", "")]
+        if adaptive and not any("lam_final" in r for r in adaptive):
+            errors.append(f"{path.name}: adaptive rows lack lam_final")
     # the headline criterion: the fused sampler-step rows must record their
     # speedup against the pre-fused reference
     if bench in ("sampler_step", "manage_loop"):

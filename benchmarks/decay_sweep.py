@@ -1,0 +1,140 @@
+"""Decay-schedule sweep: static lambda grid vs polynomial vs closed-loop
+adaptive decay on the paper's Sec. 6.2 drift scenarios (DESIGN.md Sec. 12,
+EXPERIMENTS.md §Decay-sweep).
+
+The decay rate is the robustness-vs-adaptivity dial of the whole paper
+(Sec. 3); this sweep measures where each point of the dial lands when the
+kNN-on-GMM experiment (Sec. 6.2) is run under ``single`` (one regime change)
+and ``periodic`` (recurring changes) drift:
+
+  * ``static_lamXX`` -- R-TBS with a frozen exponential rate (the grid the
+    pre-decay-subsystem repo could express);
+  * ``poly_bXX``     -- :func:`repro.decay.polynomial` power-law decay:
+    forgetting slows as the stream ages (robust, slow to adapt);
+  * ``adaptive``     -- :func:`repro.decay.loss_ratio` driving lambda from
+    the prequential miss rate inside the fused loop
+    (``make_run_farm(..., controller=...)``).
+
+Every variant runs the SAME fused Monte-Carlo farm (trials x one stream) with
+retraining every tick; reported per row: mean prequential miss over the
+whole drifted window, mean over the post-shift window (``single`` scenario:
+the recovery+steady segment after the change -- the criterion the adaptive
+controller is designed to win), 10% expected shortfall (robustness), and the
+mean realized sample size. ``us_per_call`` is wall time per trial-tick of
+the timed farm dispatch. Emits ``BENCH_decay_sweep.json`` at the repo root
+(schema: benchmarks/check_bench.py; CI regenerates at ``--smoke`` size).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro import decay as dk
+from repro.core.api import make_sampler
+from repro.data.streams import GMMStream, mode_schedule
+from repro.manage import make_model, make_run_farm, materialize_stream
+from repro.models.simple_ml import expected_shortfall
+
+from .common import smoke_mode, write_bench_json
+
+WARM = 30        # pre-drift warm-up ticks
+T = 40           # drifted/evaluated ticks
+TRIALS = 8
+SHIFT_SKIP = 3   # single: ticks after the change nobody can predict
+
+#: (drift kind, GMM frequency ratio, items/tick b, sample bound n).
+#: ``single``/``periodic`` are the paper's Sec.-6.2 settings (ratio 5); the
+#: ``single_sharp`` variant makes the dial's trade-off binding -- a sharp
+#: frequency flip (stale samples costly) with b << n (every fast-flushing
+#: static rate runs with a shrunken steady sample) -- which is where the
+#: closed-loop controller separates from the whole static grid (the
+#: convergence criterion asserted in tests/test_decay.py).
+SCENARIOS = {
+    "single": ("single", 5.0, 100, 600),
+    "periodic": ("periodic", 5.0, 100, 600),
+    "single_sharp": ("single", 25.0, 50, 400),
+}
+
+LAM_GRID = (0.005, 0.05, 0.2, 0.5)
+BETAS = (0.8, 2.0)
+ADAPTIVE = dict(lam0=0.05, lam_min=0.005, lam_max=0.5)
+
+
+def variants(smoke: bool):
+    lam_grid = LAM_GRID if not smoke else LAM_GRID[1:2]
+    betas = BETAS if not smoke else BETAS[:1]
+    out = []
+    for lam in lam_grid:
+        out.append((f"static_lam{lam:g}", {"lam": lam}, None,
+                    {"decay": f"exponential(lam={lam:g})"}))
+    for beta in betas:
+        out.append((f"poly_b{beta:g}", {"decay": dk.polynomial(beta)}, None,
+                    {"decay": f"polynomial(beta={beta:g})"}))
+    out.append(("adaptive", {"lam": ADAPTIVE["lam0"]},
+                dk.loss_ratio(**ADAPTIVE),
+                {"decay": f"loss_ratio({ADAPTIVE})"}))
+    return out
+
+
+def run():
+    smoke = smoke_mode()
+    warm, T_, trials = (6, 10, 2) if smoke else (WARM, T, TRIALS)
+
+    rows = []
+    for scenario, (kind, ratio, B_, N_) in SCENARIOS.items():
+        if smoke:
+            B_, N_ = 20, 60
+        # R-TBS buffer capacity (n + 1) is the knn param store size
+        model = make_model("knn", cap=N_ + 1, dim=2, k=7, num_classes=100)
+        stream = GMMStream(seed=0, ratio=ratio)
+
+        def mode_of(t, kind=kind, T_=T_):
+            if t < warm:
+                return 0
+            return mode_schedule(kind, t - warm, delta=10, eta=10,
+                                 start=0, stop=T_)
+        batches, bcounts = materialize_stream(
+            stream, warm + T_, batch_size=B_, mode=mode_of,
+            fields=("x", "y"),
+        )
+        for label, hyper, controller, derived in variants(smoke):
+            sampler = make_sampler("rtbs", n=N_, **hyper)
+            farm = make_run_farm(sampler, model, retrain_every=1,
+                                 controller=controller)
+            key = jax.random.key(7)
+            trace = farm(key, trials, batches, bcounts)  # compile + warm
+            jax.block_until_ready(trace["metric"])
+            t0 = time.perf_counter()
+            trace = farm(jax.random.key(8), trials, batches, bcounts)
+            jax.block_until_ready(trace["metric"])
+            us = (time.perf_counter() - t0) * 1e6 / (trials * (warm + T_))
+
+            miss = np.asarray(trace["metric"])[:, warm:]       # [trials, T]
+            sizes = np.asarray(trace["size"])[:, warm:]
+            post = miss[:, SHIFT_SKIP:] if kind == "single" else miss
+            d = dict(derived)
+            d.update(
+                scenario=scenario,
+                mean_loss=round(float(miss.mean()), 4),
+                post_shift_loss=round(float(post.mean()), 4),
+                es10=round(float(np.mean(
+                    [expected_shortfall(m, 0.10) for m in miss]
+                )), 4),
+                avg_sample=round(float(sizes.mean()), 1),
+            )
+            if controller is not None and "decay" in trace:
+                lam_path = -np.log(np.maximum(
+                    np.asarray(trace["decay"]), 1e-30))
+                d["lam_final"] = round(float(lam_path[:, -1].mean()), 4)
+                d["lam_peak"] = round(float(lam_path[:, warm:].max()), 4)
+            rows.append((f"decay_sweep_{scenario}_{label}", us, d))
+    write_bench_json("decay_sweep", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    from .common import emit
+
+    emit(run())

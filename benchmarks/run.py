@@ -10,6 +10,8 @@ report). Prints ``name,us_per_call,derived`` CSV.
             (writes BENCH_manage_loop.json)
   sampler -- sampler-step throughput sweep, fused vs pre-fused reference
             (writes BENCH_sampler_step.json)
+  decay  -- static lambda vs polynomial vs adaptive decay on the Sec. 6.2
+            drift scenarios (writes BENCH_decay_sweep.json)
   roofline -- dry-run roofline table (EXPERIMENTS.md §Roofline)
 
 Select with ``python -m benchmarks.run [names...]`` (default: all).
@@ -23,7 +25,7 @@ import time
 from .common import emit
 
 SUITES = ["fig1", "table1", "fig12", "fig13", "fig789", "manage", "sampler",
-          "roofline"]
+          "decay", "roofline"]
 
 
 def main() -> None:
@@ -44,6 +46,8 @@ def main() -> None:
             from . import manage_loop as m
         elif name == "sampler":
             from . import sampler_step as m
+        elif name == "decay":
+            from . import decay_sweep as m
         elif name == "roofline":
             from . import roofline as m
         else:

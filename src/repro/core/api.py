@@ -19,18 +19,30 @@ Registered schemes (paper reference in parentheses):
   ========  =====================================  ==========================
   name      implementation                         hyperparameters
   ========  =====================================  ==========================
-  rtbs      :mod:`repro.core.rtbs` (Alg. 2)        n, lam
-  ttbs      :mod:`repro.core.simple` (Alg. 1)      n, lam, batch_size, [cap]
-  btbs      :mod:`repro.core.simple` (Alg. 4)      lam, cap
+  rtbs      :mod:`repro.core.rtbs` (Alg. 2)        n, lam|decay
+  ttbs      :mod:`repro.core.simple` (Alg. 1)      n, lam|decay, batch_size, [cap]
+  btbs      :mod:`repro.core.simple` (Alg. 4)      lam|decay, cap
   brs       :mod:`repro.core.simple` (Alg. 5)      n          ("Unif")
   sw        :mod:`repro.core.simple`               n          (sliding window)
-  dttbs     :mod:`repro.core.distributed` (S.5.1)  n, lam, batch_size, [cap]
-  drtbs     :mod:`repro.core.distributed` (S.5.2)  n, lam, cap_s
+  dttbs     :mod:`repro.core.distributed` (S.5.1)  n, lam|decay, batch_size, [cap]
+  drtbs     :mod:`repro.core.distributed` (S.5.2)  n, lam|decay, cap_s
   ========  =====================================  ==========================
 
 ``dttbs``/``drtbs`` build *per-shard* step closures: their ``step``/``extract``
 must run inside ``jax.shard_map`` over the ``data`` mesh axis (see
 :data:`repro.core.distributed.AXIS`); the local schemes run anywhere.
+
+Decay (DESIGN.md Sec. 12): every time-biased scheme accepts EITHER a scalar
+``lam`` (sugar for ``repro.decay.exponential(lam)``, bit-identical -- the
+sugar literally constructs that schedule) OR ``decay=<DecaySchedule>`` for
+arbitrary per-tick multiplicative decay (polynomial power-law, piecewise,
+callable).  Schedules with a constant factor add NO state; time-varying
+schedules carry their bookkeeping in a :class:`repro.decay.DecayedState`
+wrapper around the scheme's own state.  Decay-capable schemes additionally
+expose ``step_decayed(key, state, batch, bcount, d)`` -- the step with the
+tick's factor supplied from outside -- which is how the closed-loop adaptive
+controller (:mod:`repro.decay.adaptive`, threaded by
+``repro.manage.make_run_loop(..., controller=...)``) drives them.
 
 Conventions shared by every scheme:
 
@@ -57,6 +69,9 @@ from typing import Any, Callable, Mapping
 
 import jax
 import jax.numpy as jnp
+
+from repro.decay import DecayedState, DecaySchedule
+from repro.decay import resolve as _resolve_schedule
 
 from . import distributed, rtbs, simple
 
@@ -90,6 +105,14 @@ class Sampler:
     WITHOUT permuting or gathering any item payloads. The manage loop logs it
     on every tick while ``extract`` runs only on retrain ticks.
 
+    ``step_decayed(key, state, batch, bcount, d)`` -- present on every
+    time-biased scheme, ``None`` on the decay-free baselines (brs/sw) -- is
+    ``step`` with the tick's multiplicative decay factor ``d`` supplied as an
+    operand (replicated and possibly traced). The manage loop's closed-loop
+    controller drives schemes exclusively through it; when the sampler was
+    built with a time-varying schedule, the external ``d`` overrides the
+    schedule's factor for that tick (the schedule state still advances).
+
     Distributed (per-shard) schemes additionally provide
     ``extract_global(key, state) -> SampleView`` / ``size_global(key, state)``:
     called under ``shard_map``, they assemble the replicated GLOBAL sample
@@ -106,6 +129,9 @@ class Sampler:
     distributed: bool = False
     extract_global: Callable[[jax.Array, Any], SampleView] | None = None
     size_global: Callable[[jax.Array, Any], jax.Array] | None = None
+    step_decayed: Callable[
+        [jax.Array, Any, Any, jax.Array, jax.Array], Any
+    ] | None = None
 
     def __repr__(self) -> str:  # keep hyper readable in logs/tracebacks
         hp = ", ".join(f"{k}={v}" for k, v in self.hyper.items())
@@ -152,7 +178,9 @@ def available_schemes() -> tuple[str, ...]:
 
 
 def make_sampler(scheme: str, **hyper) -> Sampler:
-    """Construct a registered scheme, e.g. ``make_sampler("rtbs", n=300, lam=0.1)``."""
+    """Construct a registered scheme, e.g. ``make_sampler("rtbs", n=300,
+    lam=0.1)`` or ``make_sampler("rtbs", n=300,
+    decay=repro.decay.polynomial(0.8))``."""
     try:
         builder = _REGISTRY[scheme]
     except KeyError:
@@ -162,16 +190,94 @@ def make_sampler(scheme: str, **hyper) -> Sampler:
     return builder(**hyper)
 
 
-def _ttbs_rates(n: int, lam: float, batch_size: float) -> tuple[float, float]:
-    """Alg. 1 parameterization: p = e^{-lam}; q = n(1-p)/b (must be <= 1)."""
-    p = math.exp(-lam)
+def _thread_schedule(sched: DecaySchedule, *, init, step_d, extract, size,
+                     extract_global=None, size_global=None) -> dict:
+    """Wire a :class:`~repro.decay.DecaySchedule` into a scheme's
+    decay-parametric closures (DESIGN.md Sec. 12).
+
+    ``step_d(key, state, batch, bcount, d)`` is the scheme's step with the
+    tick's multiplicative factor ``d`` as an operand.  Constant schedules
+    (``static_rate`` set -- the exponential/``lam`` sugar) bake the factor in
+    and keep the scheme's bare state, so traces and pytree structure are
+    identical to the historical scalar-``lam`` samplers.  Time-varying
+    schedules wrap the state in :class:`~repro.decay.DecayedState` and pull
+    ``d`` from the schedule per tick.  Either way the returned
+    ``step_decayed`` operates on the SAME state structure as ``step`` -- the
+    contract the manage-loop controller relies on.
+    """
+    if sched.static_rate is not None:
+        d0 = jnp.float32(sched.static_rate)
+
+        def step(key, state, batch_items, bcount):
+            return step_d(key, state, batch_items, bcount, d0)
+
+        return dict(init=init, step=step, extract=extract, size=size,
+                    step_decayed=step_d, extract_global=extract_global,
+                    size_global=size_global)
+
+    def init_w(proto):
+        return DecayedState(dstate=sched.init(), inner=init(proto))
+
+    def step_w(key, state, batch_items, bcount):
+        d, dstate = sched.tick(state.dstate)
+        return DecayedState(
+            dstate=dstate,
+            inner=step_d(key, state.inner, batch_items, bcount, d),
+        )
+
+    def step_decayed(key, state, batch_items, bcount, d):
+        # external d (controller) overrides the schedule's factor for this
+        # tick; the schedule state still advances so the two stay composable
+        return DecayedState(
+            dstate=sched.step(state.dstate),
+            inner=step_d(key, state.inner, batch_items, bcount, d),
+        )
+
+    def unwrap(fn):
+        if fn is None:
+            return None
+        return lambda key, state: fn(key, state.inner)
+
+    return dict(init=init_w, step=step_w, extract=unwrap(extract),
+                size=unwrap(size), step_decayed=step_decayed,
+                extract_global=unwrap(extract_global),
+                size_global=unwrap(size_global))
+
+
+def _decay_hyper(sched: DecaySchedule, lam) -> dict:
+    """hyper entries recording the decay choice (keep the historical ``lam``
+    key for the sugar form)."""
+    h = {"decay": sched}
+    if lam is not None:
+        h["lam"] = lam
+    return h
+
+
+def _ttbs_rates(n: int, p: float, batch_size: float) -> tuple[float, float]:
+    """Alg. 1 parameterization from the retention prob p = e^{-lam}:
+    q = n(1-p)/b (must be <= 1)."""
     q = n * (1.0 - p) / batch_size
     if not 0.0 < q <= 1.0:
         raise ValueError(
             f"T-TBS needs q = n(1-e^-lam)/b in (0, 1]; got q={q:.4f} "
-            f"(n={n}, lam={lam}, batch_size={batch_size})"
+            f"(n={n}, lam={-math.log(p):.4f}, batch_size={batch_size})"
         )
     return p, q
+
+
+def _ttbs_step_d(n: int, batch_size: float):
+    """Alg. 1 with the decay factor as an operand: p_t = d_t and
+    q_t = n (1 - p_t) / b, clipped into [0, 1] -- time-varying schedules can
+    transiently demand q > 1 (arrival rate can't sustain the target size);
+    the clip under-fills instead of failing, mirroring Thm 3.1's
+    probabilistic size control."""
+
+    def step_d(key, state, batch_items, bcount, d):
+        d = jnp.asarray(d, jnp.float32)
+        q = jnp.clip(n * (1.0 - d) / jnp.float32(batch_size), 0.0, 1.0)
+        return simple.ttbs_step(key, state, batch_items, bcount, p=d, q=q)
+
+    return step_d
 
 
 def _buffer_extract(key: jax.Array, state: simple.BufferState) -> SampleView:
@@ -189,11 +295,13 @@ def _buffer_size(key: jax.Array, state: simple.BufferState) -> jax.Array:
 # local schemes
 # ---------------------------------------------------------------------------
 @register("rtbs")
-def _make_rtbs(*, n: int, lam: float) -> Sampler:
+def _make_rtbs(*, n: int, lam: float | None = None,
+               decay: DecaySchedule | None = None) -> Sampler:
     """R-TBS (paper Alg. 2): bounded size + exact time bias at any rate."""
+    sched = _resolve_schedule(lam, decay)
 
-    def step(key, state, batch_items, bcount):
-        return rtbs.step(key, state, batch_items, bcount, n=n, lam=lam)
+    def step_d(key, state, batch_items, bcount, d):
+        return rtbs.step(key, state, batch_items, bcount, n=n, decay=d)
 
     def extract(key, state):
         mask, size = rtbs.realize(key, state)
@@ -208,51 +316,72 @@ def _make_rtbs(*, n: int, lam: float) -> Sampler:
 
     return Sampler(
         scheme="rtbs",
-        init=lambda proto: rtbs.init(proto, n),
-        step=step,
-        extract=extract,
-        size=size,
-        hyper={"n": n, "lam": lam},
+        hyper={"n": n, **_decay_hyper(sched, lam)},
+        **_thread_schedule(
+            sched,
+            init=lambda proto: rtbs.init(proto, n),
+            step_d=step_d,
+            extract=extract,
+            size=size,
+        ),
     )
 
 
 @register("ttbs")
-def _make_ttbs(*, n: int, lam: float, batch_size: float, cap: int | None = None) -> Sampler:
+def _make_ttbs(*, n: int, lam: float | None = None, batch_size: float,
+               cap: int | None = None,
+               decay: DecaySchedule | None = None) -> Sampler:
     """T-TBS (paper Alg. 1): exact eq. (1), size controlled only in mean."""
-    p, q = _ttbs_rates(n, lam, batch_size)
+    sched = _resolve_schedule(lam, decay)
     cap = 4 * n if cap is None else cap
-
-    def step(key, state, batch_items, bcount):
-        return simple.ttbs_step(
-            key, state, batch_items, bcount, p=jnp.float32(p), q=jnp.float32(q)
-        )
-
-    return Sampler(
-        scheme="ttbs",
+    hyper = {"n": n, **_decay_hyper(sched, lam), "batch_size": batch_size,
+             "cap": cap}
+    fields = _thread_schedule(
+        sched,
         init=lambda proto: simple.init(proto, cap),
-        step=step,
+        step_d=_ttbs_step_d(n, batch_size),
         extract=_buffer_extract,
         size=_buffer_size,
-        hyper={"n": n, "lam": lam, "batch_size": batch_size, "cap": cap,
-               "p": p, "q": q},
     )
+    if sched.static_rate is not None:
+        # eager Alg.-1 validation for the time-invariant case (the q > 1
+        # failure mode should fail fast, not silently under-fill), and the
+        # constant-rate step applies EXACTLY these f64-derived p/q -- the
+        # recorded hyper must be the rates the step uses, not a per-tick
+        # f32 recomputation one ulp away
+        p, q = _ttbs_rates(n, sched.static_rate, batch_size)
+        hyper.update(p=p, q=q)
+        pq = (jnp.float32(p), jnp.float32(q))
+
+        def step(key, state, batch_items, bcount):
+            return simple.ttbs_step(key, state, batch_items, bcount,
+                                    p=pq[0], q=pq[1])
+
+        fields["step"] = step
+
+    return Sampler(scheme="ttbs", hyper=hyper, **fields)
 
 
 @register("btbs")
-def _make_btbs(*, lam: float, cap: int) -> Sampler:
+def _make_btbs(*, lam: float | None = None, cap: int,
+               decay: DecaySchedule | None = None) -> Sampler:
     """B-TBS (paper Alg. 4): Bernoulli TBS -- T-TBS with q = 1."""
-    p = math.exp(-lam)
+    sched = _resolve_schedule(lam, decay)
 
-    def step(key, state, batch_items, bcount):
-        return simple.btbs_step(key, state, batch_items, bcount, p=jnp.float32(p))
+    def step_d(key, state, batch_items, bcount, d):
+        return simple.btbs_step(key, state, batch_items, bcount,
+                                p=jnp.asarray(d, jnp.float32))
 
     return Sampler(
         scheme="btbs",
-        init=lambda proto: simple.init(proto, cap),
-        step=step,
-        extract=_buffer_extract,
-        size=_buffer_size,
-        hyper={"lam": lam, "cap": cap, "p": p},
+        hyper={**_decay_hyper(sched, lam), "cap": cap},
+        **_thread_schedule(
+            sched,
+            init=lambda proto: simple.init(proto, cap),
+            step_d=step_d,
+            extract=_buffer_extract,
+            size=_buffer_size,
+        ),
     )
 
 
@@ -294,19 +423,24 @@ def _make_sw(*, n: int) -> Sampler:
 # distributed schemes (per-shard closures; call under jax.shard_map)
 # ---------------------------------------------------------------------------
 @register("dttbs")
-def _make_dttbs(*, n: int, lam: float, batch_size: float, cap: int | None = None) -> Sampler:
+def _make_dttbs(*, n: int, lam: float | None = None, batch_size: float,
+                cap: int | None = None,
+                decay: DecaySchedule | None = None) -> Sampler:
     """D-T-TBS (paper Sec. 5.1): embarrassingly parallel per-shard T-TBS.
 
     ``n``/``batch_size`` are PER-SHARD targets; ``step`` folds the shard index
     into the key, so passing the same key on every shard is correct.
     """
-    p, q = _ttbs_rates(n, lam, batch_size)
+    sched = _resolve_schedule(lam, decay)
     cap = 4 * n if cap is None else cap
+    hyper = {"n": n, **_decay_hyper(sched, lam), "batch_size": batch_size,
+             "cap": cap}
+    local_step_d = _ttbs_step_d(n, batch_size)
 
-    def step(key, state, batch_items, bcount):
-        return distributed.dttbs_shard_step(
-            key, state, batch_items, bcount, p=jnp.float32(p), q=jnp.float32(q)
-        )
+    def step_d(key, state, batch_items, bcount, d):
+        me = jax.lax.axis_index(distributed.AXIS)
+        return local_step_d(jax.random.fold_in(key, me), state, batch_items,
+                            bcount, d)
 
     def extract_global(key, state):
         del key  # deterministic membership
@@ -319,22 +453,35 @@ def _make_dttbs(*, n: int, lam: float, batch_size: float, cap: int | None = None
         del key
         return jax.lax.psum(state.count, distributed.AXIS)
 
-    return Sampler(
-        scheme="dttbs",
+    fields = _thread_schedule(
+        sched,
         init=lambda proto: simple.init(proto, cap),
-        step=step,
+        step_d=step_d,
         extract=_buffer_extract,
         size=_buffer_size,
-        hyper={"n": n, "lam": lam, "batch_size": batch_size, "cap": cap,
-               "p": p, "q": q},
-        distributed=True,
         extract_global=extract_global,
         size_global=size_global,
     )
+    if sched.static_rate is not None:
+        # as for ttbs: validate eagerly and apply the recorded f64-derived
+        # p/q verbatim on the constant-rate step
+        p, q = _ttbs_rates(n, sched.static_rate, batch_size)
+        hyper.update(p=p, q=q)
+
+        def step(key, state, batch_items, bcount):
+            return distributed.dttbs_shard_step(
+                key, state, batch_items, bcount,
+                p=jnp.float32(p), q=jnp.float32(q),
+            )
+
+        fields["step"] = step
+
+    return Sampler(scheme="dttbs", hyper=hyper, distributed=True, **fields)
 
 
 @register("drtbs")
-def _make_drtbs(*, n: int, lam: float, cap_s: int) -> Sampler:
+def _make_drtbs(*, n: int, lam: float | None = None, cap_s: int,
+                decay: DecaySchedule | None = None) -> Sampler:
     """D-R-TBS (paper Sec. 5.2-5.3): co-partitioned reservoir, distributed
     decisions. ``n`` is the GLOBAL bound, ``cap_s`` the per-shard capacity.
 
@@ -347,10 +494,11 @@ def _make_drtbs(*, n: int, lam: float, cap_s: int) -> Sampler:
     ``mask.sum() == size`` holds per shard and globally. ``extract_global``
     assembles the whole-mesh view the sharded manage loop fits models on.
     """
+    sched = _resolve_schedule(lam, decay)
 
-    def step(key, state, batch_items, bcount):
+    def step_d(key, state, batch_items, bcount, d):
         return distributed.drtbs_shard_step(
-            key, state, batch_items, bcount, n=n, lam=lam
+            key, state, batch_items, bcount, n=n, decay=d
         )
 
     def extract(key, state):
@@ -375,12 +523,15 @@ def _make_drtbs(*, n: int, lam: float, cap_s: int) -> Sampler:
 
     return Sampler(
         scheme="drtbs",
-        init=lambda proto: distributed.init_shard(proto, cap_s),
-        step=step,
-        extract=extract,
-        size=size,
-        hyper={"n": n, "lam": lam, "cap_s": cap_s},
+        hyper={"n": n, **_decay_hyper(sched, lam), "cap_s": cap_s},
         distributed=True,
-        extract_global=extract_global,
-        size_global=distributed.drtbs_global_size,
+        **_thread_schedule(
+            sched,
+            init=lambda proto: distributed.init_shard(proto, cap_s),
+            step_d=step_d,
+            extract=extract,
+            size=size,
+            extract_global=extract_global,
+            size_global=distributed.drtbs_global_size,
+        ),
     )

@@ -266,12 +266,18 @@ def drtbs_shard_step(
     bcount_local: jax.Array,
     *,
     n: int,
-    lam,
+    lam=None,
+    decay=None,
 ) -> DRTBSShard:
     """One D-R-TBS step for this shard. ``key`` must be IDENTICAL across shards
-    (replicated); shard-local draws fold in the shard index."""
+    (replicated); shard-local draws fold in the shard index. ``decay`` gives
+    the per-tick multiplicative factor d_t directly (replicated, possibly
+    traced -- the :mod:`repro.decay` form) instead of the rate ``lam``;
+    exactly one of the two must be passed."""
+    from . import rtbs as _rtbs
+
     me = jax.lax.axis_index(AXIS)
-    decay = jnp.exp(-jnp.asarray(lam, jnp.float32))
+    decay = _rtbs._resolve_decay(lam, decay)
     bcount_local = jnp.asarray(bcount_local, jnp.int32)
     B = jax.lax.psum(bcount_local, AXIS)            # the ONE aggregation (Sec. 5.1)
     Bf = B.astype(jnp.float32)

@@ -125,8 +125,92 @@ def realize_compact(key: jax.Array, lat: Latent) -> tuple[Any, jax.Array]:
     return compact_items(lat.items, mask), size
 
 
+def _downsample_map_small(key: jax.Array, cap: int, k, f, kp, fp, nw, cw,
+                          D: int) -> jax.Array:
+    """Delete-complement construction of the Alg. 3 slot map: O(D) random
+    work instead of a full-domain PRP evaluation (DESIGN.md Sec. 12).
+
+    Valid when at most ``D`` full items leave the full set (``k - kp <= D``)
+    or when no full item is deleted at all (kp == 0 / kp == k, which need
+    only ONE uniform full-slot draw). Instead of drawing a length-``cap``
+    prefix permutation and *keeping* its head, delete the complement: repeat
+    ``d`` times "remove a uniform slot of the current prefix [0, m) by
+    moving the item at m-1 into it" -- the classic swap-with-last deletion,
+    each step uniform over the remaining items, so the surviving set is an
+    exact uniform (k-d)-subset. A final uniform swap positions the new
+    partial item uniformly among the survivors. Full items are exchangeable
+    beyond the full/partial split, so survivor ORDER is free -- exactly the
+    freedom the full-permutation construction also exploits.
+
+    Same distribution as the ``prefix_permutation_fast`` path (Theorem 4.1
+    re-verified in tests), different RNG stream.
+    """
+    kperm, ku = jax.random.split(key)
+    u = jax.random.uniform(ku, dtype=jnp.float32)
+    # D victim draws + one uniform-full draw + one survivor draw, all from
+    # raw bits (modulo bias <= m / 2^32: orders below the MC tolerance of
+    # every Thm 4.1/4.2 check, same budget as rng.swap_or_not)
+    rb = jax.random.bits(kperm, (D + 2,), jnp.uint32)
+    slot = jnp.arange(cap, dtype=jnp.int32)
+    identity = slot
+    safe_c = jnp.maximum(cw, 1e-30)
+
+    def unif(bits, m):  # uniform int32 in [0, m), m >= 1 traced
+        return (bits % jnp.maximum(m, 1).astype(jnp.uint32)).astype(jnp.int32)
+
+    unif_full = unif(rb[D], k)                    # one uniform full slot
+
+    # ---- case kp == 0 (paper Alg.3 lines 5-8): no loop needed ----
+    keep_old = u <= f / safe_c
+    src_case0 = identity.at[0].set(jnp.where(keep_old, k, unif_full))
+
+    # ---- case 0 < kp == k (lines 9-11): swap partial <-> uniform full ----
+    rho = (1.0 - (nw / safe_c) * f) / jnp.maximum(1.0 - fp, 1e-30)
+    do_swap = u > rho
+    src_swap = identity.at[unif_full].set(k).at[k].set(unif_full)
+    src_case_eq = jnp.where(do_swap, src_swap, identity)
+
+    # ---- case 0 < kp < k (lines 12-18): delete-complement ----
+    p1 = (nw / safe_c) * f
+    b1 = u <= p1
+    # branch1 keeps kp of the k fulls (old partial joins as a full);
+    # branch2 keeps kp + 1 (one of them becomes the new partial)
+    d = jnp.where(b1, k - kp, k - kp - 1)
+
+    def delete(i, src):
+        m = k - i                                  # current prefix length
+        v = unif(rb[jnp.minimum(i, D - 1)], m)
+        return src.at[v].set(src[jnp.clip(m - 1, 0, cap - 1)])
+
+    # dynamic trip count: only the ACTUAL deletions run (a decay tick trims
+    # ~(1-d_t)C items, typically far below the static bound D); zero trips
+    # for the loop-free cases
+    trips = jnp.where((kp > 0) & (kp < k), jnp.clip(d, 0, D), 0)
+    src_lt = jax.lax.fori_loop(0, trips, delete, identity)
+    # branch2: survivors at [0, kp+1); uniform one of them becomes the
+    # partial at slot kp (swap j <-> kp)
+    j2 = unif(rb[D + 1], kp + 1)
+    sj2, sk2 = src_lt[j2], src_lt[jnp.minimum(kp, cap - 1)]
+    src_b2 = src_lt.at[kp].set(sj2).at[j2].set(sk2)
+    # branch1: survivors at [0, kp); uniform one becomes the partial at slot
+    # kp, its hole filled by the last survivor, old partial lands at kp-1
+    kp_m1 = jnp.maximum(kp - 1, 0)
+    j1 = unif(rb[D + 1], kp)
+    sj1, slast = src_lt[j1], src_lt[kp_m1]
+    src_b1 = src_lt.at[kp].set(sj1).at[j1].set(slast).at[kp_m1].set(k)
+    src_case_lt = jnp.where(b1, src_b1, src_b2)
+
+    src = jnp.where(
+        kp == 0,
+        src_case0,
+        jnp.where(kp == k, src_case_eq, src_case_lt),
+    )
+    return jnp.where(nw >= cw, identity, src)
+
+
 def downsample_map(
-    key: jax.Array, cap: int, nfull, weight, new_weight, *, exact: bool = False
+    key: jax.Array, cap: int, nfull, weight, new_weight, *,
+    exact: bool = False, max_deleted: int | None = None
 ) -> jax.Array:
     """Slot-index map of paper Algorithm 3: ``src[cap]`` (new slot -> old slot)
     such that gathering the old buffer through ``src`` realizes the
@@ -138,6 +222,15 @@ def downsample_map(
     :func:`repro.core.rng.prefix_permutation_fast`; ``exact=True`` restores
     the exact-but-O(cap log cap) argsort draw (the pre-fused RNG stream --
     see DESIGN.md Sec. 11 -- used by the reference step and parity tests).
+
+    ``max_deleted`` (static) enables the delete-complement fast path
+    (:func:`_downsample_map_small`): whenever at most ``max_deleted`` full
+    items leave the full set -- the common fill-up-phase case, where each
+    tick's decay trims a sliver off a large sample -- the map is built with
+    O(max_deleted) random work under a ``lax.cond`` instead of evaluating
+    the PRP over the whole domain; larger trims fall back to the full
+    construction at runtime. Identical distribution either way (different
+    RNG stream); ignored when ``exact=True``.
     """
     del nfull  # the map depends on floor(weight) only; kept for signature clarity
     cw = _f32(weight)
@@ -145,6 +238,22 @@ def downsample_map(
     k, f = floor_frac(cw)
     kp, fp = floor_frac(nw)
 
+    if not exact and max_deleted is not None and max_deleted > 0:
+        D = min(int(max_deleted), cap)
+        can_fast = (kp == 0) | (kp == k) | (k - kp <= D)
+        return jax.lax.cond(
+            can_fast,
+            lambda: _downsample_map_small(key, cap, k, f, kp, fp, nw, cw, D),
+            lambda: _downsample_map_full(key, cap, k, f, kp, fp, nw, cw,
+                                         exact),
+        )
+    return _downsample_map_full(key, cap, k, f, kp, fp, nw, cw, exact)
+
+
+def _downsample_map_full(key, cap: int, k, f, kp, fp, nw, cw,
+                         exact: bool) -> jax.Array:
+    """The full-domain construction: one length-``cap`` prefix permutation,
+    branch maps selected with jnp.where."""
     kperm, ku = jax.random.split(key)
     perm_fn = rng.prefix_permutation if exact else rng.prefix_permutation_fast
     perm = perm_fn(kperm, cap, k)  # random order over full slots
@@ -192,17 +301,20 @@ def downsample_map(
     return jnp.where(nw >= cw, identity, src)
 
 
-def downsample(key: jax.Array, lat: Latent, new_weight, *, exact: bool = False) -> Latent:
+def downsample(key: jax.Array, lat: Latent, new_weight, *, exact: bool = False,
+               max_deleted: int | None = None) -> Latent:
     """Paper Algorithm 3: rescale inclusion probabilities by C'/C (Theorem 4.1).
 
     Requires 0 < C' <= C (C' == C is an identity shortcut). All branches are
-    computed as slot-index maps (:func:`downsample_map`) and selected with
-    jnp.where, so the whole operation is one gather regardless of branch.
+    computed as slot-index maps (:func:`downsample_map`, which also documents
+    ``max_deleted``) and selected with jnp.where, so the whole operation is
+    one gather regardless of branch.
     """
     cw = _f32(lat.weight)
     nw = jnp.minimum(_f32(new_weight), cw)
     kp, _ = floor_frac(nw)
-    src = downsample_map(key, lat.cap, lat.nfull, lat.weight, new_weight, exact=exact)
+    src = downsample_map(key, lat.cap, lat.nfull, lat.weight, new_weight,
+                         exact=exact, max_deleted=max_deleted)
     new_items = gather(lat.items, src)
     return Latent(items=new_items, nfull=kp, weight=nw)
 

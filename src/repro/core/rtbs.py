@@ -104,9 +104,13 @@ def _tick_map(key, state: RTBSState, bcount, bcap: int, *, n: int, decay):
         # to W - B (sat lines 19-20)
         t1 = jnp.where(was_unsat, w_dec, w_new - bf)
         apply1 = jnp.where(was_unsat, (w_dec > 0) & (w_dec < C), True)
+        # delete-complement fast path: a decay/undershoot trim removes
+        # C - t1 ~ (1 - d) C items -- usually far fewer than bcap -- so the
+        # map costs O(bcap) instead of a full-domain PRP evaluation (the
+        # fill-up-phase hot spot; falls back past bcap deletions at runtime)
         src1 = jnp.where(
             apply1,
-            lt.downsample_map(k_ds, cap, k0, C, t1),
+            lt.downsample_map(k_ds, cap, k0, C, t1, max_deleted=bcap),
             jnp.arange(cap, dtype=jnp.int32),
         )
         C1 = jnp.where(
@@ -134,9 +138,11 @@ def _tick_map(key, state: RTBSState, bcount, bcap: int, *, n: int, decay):
 
         # stage 3: overshoot downsample to n (unsat lines 11-12 only)
         overshoot = was_unsat & (C2 > nf)
+        # an overshoot trims C2 - n <= B <= bcap items: always the fast map
         src2 = jax.lax.cond(
             overshoot,
-            lambda: lt.downsample_map(k_over, V, k1 + bcnt, C2, nf),
+            lambda: lt.downsample_map(k_over, V, k1 + bcnt, C2, nf,
+                                      max_deleted=bcap),
             lambda: jnp.arange(V, dtype=jnp.int32),
         )
         src = mid[src2[:cap]]          # compose: one gather of int32 maps
@@ -161,6 +167,21 @@ def _tick_map(key, state: RTBSState, bcount, bcap: int, *, n: int, decay):
     return src, C3, w_new
 
 
+def _resolve_decay(lam, decay) -> jax.Array:
+    """The per-tick multiplicative decay factor d_t from either a rate
+    (``lam`` -> e^{-lam}) or the factor itself (``decay``, as produced by a
+    :mod:`repro.decay` schedule / controller). Exactly one must be given;
+    both may be traced scalars (DESIGN.md Sec. 12)."""
+    if (lam is None) == (decay is None):
+        raise ValueError(
+            f"pass exactly one of lam= or decay=; got lam={lam!r}, "
+            f"decay={decay!r}"
+        )
+    if decay is None:
+        return jnp.exp(-jnp.asarray(lam, jnp.float32))
+    return jnp.asarray(decay, jnp.float32)
+
+
 @functools.partial(jax.jit, static_argnames=("n", "impl"))
 def step(
     key: jax.Array,
@@ -169,22 +190,26 @@ def step(
     bcount: jax.Array,
     *,
     n: int,
-    lam: float | jax.Array,
+    lam: float | jax.Array | None = None,
+    decay: float | jax.Array | None = None,
     impl: str | None = None,
 ) -> RTBSState:
     """Advance R-TBS by one batch arrival (paper Algorithm 2), fused.
 
     ``batch_items``: pytree, leaves [bcap, ...]; valid prefix length ``bcount``.
     ``lam`` may be a traced scalar; elapsed time between batches is 1 (use
-    lam * dt for irregular arrivals, per paper Sec. 2). ``impl`` routes the
-    payload pass (None = auto: Pallas kernel on TPU, jnp oracle elsewhere;
-    see :mod:`repro.kernels.tbs_step.ops`).
+    lam * dt for irregular arrivals, per paper Sec. 2). ``decay`` gives the
+    per-tick multiplicative factor d_t directly instead (the
+    :mod:`repro.decay` schedules and the adaptive controller feed this form;
+    pass exactly one of the two). ``impl`` routes the payload pass (None =
+    auto: Pallas kernel on TPU, jnp oracle elsewhere; see
+    :mod:`repro.kernels.tbs_step.ops`).
 
     Identical C_t/W_t trajectories and sampling distribution as
     :func:`step_ref` (asserted in tests/test_tbs_step.py); the RNG stream
     differs (DESIGN.md Sec. 11).
     """
-    decay = jnp.exp(-jnp.asarray(lam, jnp.float32))
+    decay = _resolve_decay(lam, decay)
     bcount = jnp.asarray(bcount, jnp.int32)
     bcap = jax.tree_util.tree_leaves(batch_items)[0].shape[0]
 
@@ -274,12 +299,13 @@ def step_ref(
     bcount: jax.Array,
     *,
     n: int,
-    lam: float | jax.Array,
+    lam: float | jax.Array | None = None,
+    decay: float | jax.Array | None = None,
 ) -> RTBSState:
     """The pre-fused R-TBS step: per-stage buffer rewrites with exact argsort
     permutations -- 2-4 full sorts + multi-gather slot remaps per tick. Kept
     as the parity oracle and the benchmark baseline; use :func:`step`."""
-    decay = jnp.exp(-jnp.asarray(lam, jnp.float32))
+    decay = _resolve_decay(lam, decay)
     bcount = jnp.asarray(bcount, jnp.int32)
     was_unsat = state.total_weight < n
     lat, w_new = jax.lax.cond(

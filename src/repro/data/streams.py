@@ -29,12 +29,14 @@ def batch_size_schedule(kind: str, t: int, *, b: int = 100, phi: float = 1.002,
     decaying."""
     if kind == "constant":
         return b
-    if kind == "growing":   # Fig. 1(a): B_{t+1} = phi B_t after t0
-        return int(round(b * (phi ** max(0, t - t0))))
+    if kind in ("growing", "decaying"):
+        # Fig. 1(a)/(d): B_{t+1} = phi B_t after t0 (phi > 1 grows, < 1
+        # decays). Floored at 1 item: a decaying regime must never reach a
+        # permanently-zero bcount tail, which jitted manage loops would spin
+        # through as all-NaN empty ticks.
+        return max(1, int(round(b * (phi ** max(0, t - t0)))))
     if kind == "uniform":   # Fig. 1(c): iid Uniform[0, 2b]
         return int(np.random.RandomState((seed, t)).randint(0, 2 * b + 1))
-    if kind == "decaying":  # Fig. 1(d): B_{t+1} = phi B_t after t0, phi < 1
-        return int(round(b * (phi ** max(0, t - t0))))
     raise ValueError(kind)
 
 

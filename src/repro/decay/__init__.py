@@ -1,0 +1,25 @@
+"""repro.decay -- arbitrary decay schedules + closed-loop adaptive decay.
+
+Generalizes the TBS family's frozen scalar-exponential ``lam`` to the full
+per-tick multiplicative-decay family (exponential / polynomial power-law /
+piecewise / arbitrary callable), and adds a prequential-loss-driven
+controller that moves the decay rate online inside the jitted manage loop.
+See DESIGN.md Sec. 12; threading points are ``make_sampler(..., decay=...)``
+(:mod:`repro.core.api`) and ``make_run_loop(..., controller=...)``
+(:mod:`repro.manage.loop`).
+"""
+from .adaptive import (  # noqa: F401
+    AdaptiveDecay,
+    ControllerState,
+    loss_ratio,
+)
+from .schedules import (  # noqa: F401
+    DecayedState,
+    DecaySchedule,
+    decay_profile,
+    exponential,
+    from_callable,
+    piecewise,
+    polynomial,
+    resolve,
+)

@@ -1,0 +1,193 @@
+"""Closed-loop adaptive decay: drive lambda from the prequential loss
+(DESIGN.md Sec. 12).
+
+The decay rate is THE robustness-vs-adaptivity dial of the source paper
+(Sec. 3): large lambda forgets fast (quick recovery after drift, small
+steady-state sample), small lambda remembers (big sample, slow recovery).
+A fixed schedule must pick one point on that dial for the whole stream; the
+controller here moves along it online, inside the jitted manage loop, using
+the only signal the loop already produces every tick -- the prequential
+metric (model evaluated on each batch BEFORE seeing it).
+
+Heuristic (loss-ratio drift detector, the classic fast/slow-EMA form):
+
+    fast <- (1 - a_f) fast + a_f loss_t          (short horizon)
+    slow <- (1 - a_s) slow + a_s loss_t          (long horizon,  a_s < a_f)
+    on retrain ticks:
+        e = log(fast / slow)
+        if e > fire and not refractory:  loglam <- log lam_max   # PULSE
+        else:                            loglam <- clip(loglam
+                                             + gain_down * dead(e) - relax,
+                                             [log lam_min, log lam_max])
+
+where ``dead(e) = min(e + deadband, 0) - deadband`` keeps only the
+below-band part of a falling ratio.  The shape is detect-and-pulse rather
+than proportional control, for reasons the failure modes dictate:
+
+  * **Pulse, not increments.** Drift announces itself as a few ticks of
+    elevated loss-ratio before retraining absorbs the signal; an
+    incremental controller must win the spike in those ticks or not at
+    all. Jumping straight to ``lam_max`` front-loads the flush where it is
+    cheapest (the stale pool decays by e^{-lam} per tick from the first
+    pulse tick).
+  * **Refractory window.** The pulse itself raises the loss -- flushing
+    shrinks the sample and the shrunken sample scores worse -- so for
+    ``cooldown`` adjustments after a pulse the detector is disarmed and
+    only annealing runs.  Without this the controller chases its own
+    damage (loss up -> lambda up -> sample down -> loss up) and pins
+    lambda at lam_max.  Drift that genuinely persists past the window
+    fires the next pulse.
+  * **Relaxation.** ``relax`` leaks log-lambda toward ``lam_min``
+    whenever no pulse is firing.  A ratio detector sees *transients*, not
+    levels: after the post-pulse loss plateaus, fast == slow, and without
+    the leak lambda would park wherever the pulse left it (the stuck-high
+    failure mode).  Elevated decay is only ever justified by an active
+    drift signal, so absent one the controller always drifts back to the
+    robust end -- maximum sample -- which is also why a stationary stream
+    converges to lam_min instead of chattering.
+
+Contract (mirrors :class:`repro.decay.DecaySchedule`, plus a feedback input):
+
+  * ``init() -> cstate``                 controller state pytree
+  * ``rate(cstate) -> d_t``              this tick's multiplicative decay
+  * ``observe(cstate, loss, adjust)``    fold in one prequential loss sample;
+                                         ``adjust`` (bool, traced or static)
+                                         gates the lambda update -- the manage
+                                         loop passes its retrain-tick flag, so
+                                         the adjustment cadence matches the
+                                         cadence at which the loss can actually
+                                         respond to a lambda change.
+
+``observe`` ignores non-finite losses (empty ticks report NaN) and runs its
+first ``warmup`` observations in estimate-only mode.  All three closures are
+jit/scan/vmap-safe with fixed shapes; the controller object itself is static
+and hashes by identity (memoization keys, like Sampler/ModelAdapter).
+Threading through the loop -- ``make_run_loop(..., controller=...)`` and the
+sharded twin -- lives in :mod:`repro.manage.loop`; the sampler side needs
+only the ``step_decayed`` closure every decay-capable scheme exposes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Mapping
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class ControllerState:
+    """Loop-carried state of the loss-ratio controller."""
+
+    loglam: jax.Array   # f32, log of the current decay rate lambda
+    fast: jax.Array     # f32, short-horizon EMA of the prequential loss
+    slow: jax.Array     # f32, long-horizon EMA of the prequential loss
+    seen: jax.Array     # int32, finite losses observed so far
+    hold: jax.Array     # int32, refractory adjustments left (no up-steps)
+
+    @property
+    def lam(self) -> jax.Array:
+        return jnp.exp(self.loglam)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class AdaptiveDecay:
+    """A closed-loop decay controller; see the module docstring for the
+    contract and :func:`loss_ratio` for the standard instance."""
+
+    name: str
+    init: Callable[[], ControllerState]
+    rate: Callable[[ControllerState], jax.Array]
+    observe: Callable[[ControllerState, jax.Array, jax.Array], ControllerState]
+    hyper: Mapping[str, Any]
+
+    def __repr__(self) -> str:
+        hp = ", ".join(f"{k}={v}" for k, v in self.hyper.items())
+        return f"{self.name}({hp})"
+
+
+def loss_ratio(*, lam0: float, lam_min: float, lam_max: float,
+               fast_alpha: float = 0.5, slow_alpha: float = 0.05,
+               fire: float = 0.25, gain_down: float = 1.0,
+               relax: float = 0.3, cooldown: int = 8,
+               deadband: float = 0.05, warmup: int = 3) -> AdaptiveDecay:
+    """The fast/slow-EMA loss-ratio controller (module docstring).
+
+    ``lam0`` is the starting rate, ``[lam_min, lam_max]`` the clip range
+    (choose lam_min for the desired steady-state sample size via
+    ``E W = b / (1 - e^{-lam})``, lam_max for the desired flush speed).
+    ``fire`` is the log-ratio detection threshold that triggers a pulse to
+    lam_max, ``cooldown`` the refractory window after one, ``gain_down``
+    scales the extra anneal step on a falling ratio and ``relax`` the
+    unconditional leak toward lam_min (see the module docstring for why
+    each exists); ``deadband`` is the ignored |log fast/slow| band on the
+    anneal side, ``warmup`` the number of finite losses consumed before
+    any adjustment (the EMAs start AT the first loss).
+    """
+    if not 0 < lam_min <= lam0 <= lam_max:
+        raise ValueError(
+            f"need 0 < lam_min <= lam0 <= lam_max; got "
+            f"lam_min={lam_min}, lam0={lam0}, lam_max={lam_max}"
+        )
+    if not 0 < slow_alpha <= fast_alpha <= 1:
+        raise ValueError(
+            f"need 0 < slow_alpha <= fast_alpha <= 1; got "
+            f"slow_alpha={slow_alpha}, fast_alpha={fast_alpha}"
+        )
+    lo, hi = math.log(lam_min), math.log(lam_max)
+
+    def init() -> ControllerState:
+        return ControllerState(
+            loglam=jnp.float32(math.log(lam0)),
+            fast=jnp.float32(0.0),
+            slow=jnp.float32(0.0),
+            seen=jnp.int32(0),
+            hold=jnp.int32(0),
+        )
+
+    def rate(c: ControllerState) -> jax.Array:
+        return jnp.exp(-jnp.exp(c.loglam))
+
+    def observe(c: ControllerState, loss, adjust) -> ControllerState:
+        loss = jnp.asarray(loss, jnp.float32)
+        ok = jnp.isfinite(loss)
+        loss = jnp.where(ok, loss, 0.0)
+        first = c.seen == 0
+        fast = jnp.where(first, loss, (1 - fast_alpha) * c.fast + fast_alpha * loss)
+        slow = jnp.where(first, loss, (1 - slow_alpha) * c.slow + slow_alpha * loss)
+        fast = jnp.where(ok, fast, c.fast)
+        slow = jnp.where(ok, slow, c.slow)
+        seen = c.seen + ok.astype(jnp.int32)
+
+        err = jnp.log(jnp.maximum(fast, 1e-12) / jnp.maximum(slow, 1e-12))
+        do = jnp.asarray(adjust) & ok & (seen >= warmup)
+        pulse = do & (err > fire) & (c.hold == 0)
+        # anneal side: the below-deadband part of a falling ratio, plus the
+        # unconditional relax leak
+        dead = jnp.minimum(err + deadband, 0.0)
+        annealed = jnp.clip(c.loglam + gain_down * dead - relax, lo, hi)
+        loglam = jnp.where(
+            pulse, jnp.float32(hi), jnp.where(do, annealed, c.loglam)
+        )
+        hold = jnp.where(
+            do,
+            jnp.where(pulse, jnp.int32(cooldown),
+                      jnp.maximum(c.hold - 1, 0)),
+            c.hold,
+        )
+        return ControllerState(loglam=loglam, fast=fast, slow=slow,
+                               seen=seen, hold=hold)
+
+    return AdaptiveDecay(
+        name="loss_ratio",
+        init=init,
+        rate=rate,
+        observe=observe,
+        hyper={"lam0": lam0, "lam_min": lam_min, "lam_max": lam_max,
+               "fast_alpha": fast_alpha, "slow_alpha": slow_alpha,
+               "fire": fire, "gain_down": gain_down, "relax": relax,
+               "cooldown": cooldown, "deadband": deadband,
+               "warmup": warmup},
+    )

@@ -1,0 +1,222 @@
+"""Decay schedules: arbitrary time-decay for the TBS family (DESIGN.md Sec. 12).
+
+Every scheme in :mod:`repro.core` decays the sample's total weight once per
+tick. Until this subsystem existed the decay was a single scalar exponential
+``lam`` frozen at sampler construction; the journal extension of the source
+paper generalizes R-TBS to arbitrary decay functions, and the time-decay
+literature (PAPERS.md: "Learning-Augmented Moment Estimation on Time-Decay
+Models") treats polynomial decay as a first-class citizen. This module is the
+repo's representation of that family:
+
+A :class:`DecaySchedule` produces a *per-tick multiplicative decay factor*
+``d_t in [0, 1]`` plus the bookkeeping state needed to compute it.  Applying
+``W <- d_t * W + B_t`` every tick gives item ``i`` (arriving at tick ``t_i``)
+the weight
+
+    w_t(i) = D_t / D_{t_i},     D_t = prod_{s <= t} d_s,
+
+i.e. exactly the family of decay functions expressible as a ratio of one
+fixed cumulative sequence.  Exponential decay (``d_t = e^{-lam}`` constant)
+is the time-invariant member -- weight depends only on *age* -- and remains
+the algebra all of the paper's theorems are stated in; the other instances
+trade that invariance for different robustness/adaptivity profiles:
+
+  * :func:`exponential` -- the paper's eq. (1); ``static_rate`` is set, so
+    samplers built from it carry NO extra state and trace identically to the
+    scalar-``lam`` sugar (bit-identity asserted in tests/test_decay.py).
+  * :func:`polynomial`  -- power-law in arrival time: ``w_t(i) =
+    ((t_i + t0) / (t + t0))**beta``.  Forgetting slows as the stream ages
+    (d_t -> 1): maximally robust, minimally adaptive.
+  * :func:`piecewise`   -- exponential with a tick-indexed rate table
+    (operator-planned regime changes).
+  * :func:`from_callable` -- any jit-traceable ``t -> d_t``.
+
+Schedules follow the same closure discipline as
+:class:`repro.core.api.Sampler`: the schedule object is static (identity
+hash, safe to close over in jitted code), only ``init()``'s return value is
+a pytree.  Closed-loop *adaptive* decay -- where d_t is driven by the
+prequential loss instead of a fixed schedule -- lives in
+:mod:`repro.decay.adaptive` and is threaded through the manage loop, not
+through the sampler state.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Mapping
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class DecayedState:
+    """Sampler state wrapped with its schedule's bookkeeping.
+
+    Used by :mod:`repro.core.api` for schedules WITHOUT a ``static_rate``:
+    ``inner`` is the scheme's own state pytree, ``dstate`` the schedule
+    state (typically a tick counter).  Static schedules (exponential) keep
+    the bare inner state, so the scalar-``lam`` sugar stays bit-identical.
+    """
+
+    dstate: Any
+    inner: Any
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class DecaySchedule:
+    """A decay function in per-tick multiplicative form.
+
+    ``init()`` returns the schedule state (a pytree, scan/vmap/shard_map
+    safe); ``rate(dstate)`` is THIS tick's factor ``d_t`` (f32 scalar in
+    [0, 1], consumed before the sampler step); ``step(dstate)`` advances the
+    state by one tick.  ``static_rate`` is set iff ``rate`` is a constant
+    independent of ``dstate`` -- consumers may then skip carrying the state
+    entirely (the exponential fast path).  ``eq=False`` keeps identity
+    hashing so schedules work inside memoization keys exactly like Samplers
+    and ModelAdapters.
+    """
+
+    name: str
+    init: Callable[[], Any]
+    rate: Callable[[Any], jax.Array]
+    step: Callable[[Any], Any]
+    hyper: Mapping[str, Any]
+    static_rate: float | None = None
+
+    def tick(self, dstate) -> tuple[jax.Array, Any]:
+        """Convenience: ``(d_t, advanced state)`` in one call."""
+        return self.rate(dstate), self.step(dstate)
+
+    def __repr__(self) -> str:
+        hp = ", ".join(f"{k}={v}" for k, v in self.hyper.items())
+        return f"{self.name}({hp})"
+
+
+def _counter_schedule(name: str, rate_of_t: Callable[[jax.Array], jax.Array],
+                      hyper: Mapping[str, Any],
+                      static_rate: float | None = None) -> DecaySchedule:
+    """Schedules whose only state is the tick counter t (int32, starts 0)."""
+    return DecaySchedule(
+        name=name,
+        init=lambda: jnp.int32(0),
+        rate=lambda t: jnp.clip(
+            jnp.asarray(rate_of_t(t), jnp.float32), 0.0, 1.0
+        ),
+        step=lambda t: t + 1,
+        hyper=hyper,
+        static_rate=static_rate,
+    )
+
+
+def exponential(lam: float) -> DecaySchedule:
+    """The paper's exponential decay: ``d_t = e^{-lam}`` for every tick.
+
+    ``static_rate`` is set, so samplers built from this schedule carry no
+    schedule state and ``make_sampler(scheme, lam=...)`` is literally sugar
+    for ``make_sampler(scheme, decay=exponential(lam))`` (bit-identical).
+    """
+    if lam < 0:
+        raise ValueError(f"exponential decay needs lam >= 0; got {lam}")
+    d = math.exp(-float(lam))
+    return _counter_schedule(
+        "exponential", lambda t: jnp.float32(d), {"lam": float(lam)},
+        static_rate=d,
+    )
+
+
+def polynomial(beta: float, *, t0: float = 1.0) -> DecaySchedule:
+    """Power-law (time-decay-model) weights: ``w_t(i) = ((t_i + t0) /
+    (t + t0)) ** beta`` via the telescoping per-tick factor
+    ``d_t = ((t - 1 + t0) / (t + t0)) ** beta``.
+
+    Unlike exponential decay the forgetting rate is not age-invariant:
+    ``d_t -> 1`` as the stream ages, so an ever-growing fraction of history
+    is retained -- the robust end of the robustness/adaptivity dial
+    (DESIGN.md Sec. 12). ``t0 > 0`` offsets the pole at the stream start
+    (at ``t = 0`` the factor multiplies an empty sample either way).
+    """
+    if beta < 0:
+        raise ValueError(f"polynomial decay needs beta >= 0; got {beta}")
+    if t0 <= 0:
+        raise ValueError(f"polynomial decay needs t0 > 0; got {t0}")
+
+    def rate(t):
+        tf = jnp.asarray(t, jnp.float32)
+        return (jnp.maximum(tf - 1.0 + t0, 0.0) / (tf + t0)) ** beta
+
+    return _counter_schedule(
+        "polynomial", rate, {"beta": float(beta), "t0": float(t0)}
+    )
+
+
+def piecewise(boundaries: tuple[int, ...], lams: tuple[float, ...]) -> DecaySchedule:
+    """Exponential decay with a tick-indexed rate table: rate ``lams[k]``
+    applies on ticks in ``[boundaries[k-1], boundaries[k])`` (boundaries
+    strictly increasing; ``len(lams) == len(boundaries) + 1``)."""
+    boundaries = tuple(int(b) for b in boundaries)
+    lams = tuple(float(v) for v in lams)
+    if len(lams) != len(boundaries) + 1:
+        raise ValueError(
+            f"piecewise needs len(lams) == len(boundaries) + 1; got "
+            f"{len(lams)} lams, {len(boundaries)} boundaries"
+        )
+    if any(b2 <= b1 for b1, b2 in zip(boundaries, boundaries[1:])):
+        raise ValueError(f"boundaries must be strictly increasing: {boundaries}")
+    if any(v < 0 for v in lams):
+        raise ValueError(f"piecewise lams must be >= 0: {lams}")
+    bnd = jnp.asarray(boundaries, jnp.int32)
+    dec = jnp.asarray([math.exp(-v) for v in lams], jnp.float32)
+
+    def rate(t):
+        seg = jnp.searchsorted(bnd, jnp.asarray(t, jnp.int32), side="right")
+        return dec[seg]
+
+    return _counter_schedule(
+        "piecewise", rate, {"boundaries": boundaries, "lams": lams},
+        static_rate=(math.exp(-lams[0]) if not boundaries else None),
+    )
+
+
+def from_callable(fn: Callable[[jax.Array], jax.Array], *,
+                  name: str = "callable", **hyper) -> DecaySchedule:
+    """Arbitrary decay: ``fn(t) -> d_t`` with ``t`` the (traced) int32 tick
+    index.  ``fn`` must be jit-traceable and return a factor in [0, 1]
+    (clipped defensively); for a decay *rate* function ``lam(t)`` pass
+    ``lambda t: jnp.exp(-lam(t))``."""
+    return _counter_schedule(name, fn, dict(hyper))
+
+
+def resolve(lam: float | None = None,
+            decay: DecaySchedule | None = None) -> DecaySchedule:
+    """The ``(lam=, decay=)`` sugar resolver used by the sampler registry:
+    exactly one of the two must be given; a scalar ``lam`` means
+    :func:`exponential`."""
+    if (lam is None) == (decay is None):
+        raise ValueError(
+            "pass exactly one of lam= (scalar exponential sugar) or decay= "
+            f"(a DecaySchedule); got lam={lam!r}, decay={decay!r}"
+        )
+    if decay is None:
+        return exponential(lam)
+    if not isinstance(decay, DecaySchedule):
+        raise TypeError(
+            f"decay= must be a repro.decay.DecaySchedule (see "
+            f"repro.decay.exponential/polynomial/piecewise/from_callable); "
+            f"got {type(decay).__name__} -- for a scalar rate use lam="
+        )
+    return decay
+
+
+def decay_profile(schedule: DecaySchedule, T: int) -> jax.Array:
+    """The first ``T`` factors ``[d_0, ..., d_{T-1}]`` of a schedule --
+    the analytic hook for tests and benchmarks (cumulative products of this
+    give every item weight ``w_t(i) = D_t / D_{t_i}``)."""
+
+    def body(ds, _):
+        d, ds = schedule.tick(ds)
+        return ds, d
+
+    _, ds = jax.lax.scan(body, schedule.init(), None, length=T)
+    return ds

@@ -16,14 +16,24 @@ builds a ``data``-axis mesh over ``--shards`` devices (re-exec'ing itself
 with forced host devices when the host has too few -- the per-pod production
 launcher pattern), co-partitions the stream, and runs the whole run as ONE
 fused :func:`repro.manage.make_sharded_run_loop` program: co-partitioned
-reservoir shards, replicated params, one psum per tick. Checkpoint/resume is
-a local-loop feature; the sharded path logs its trace at the end instead.
+reservoir shards, replicated params, one psum per tick. With ``--ckpt-dir``
+the stream is consumed in ``--ckpt-every``-tick segments through
+:func:`repro.manage.make_sharded_resume_loop` (the ``gather_tree`` snapshot
+is what gets serialized), so ``--resume`` restarts the sharded run
+bit-exactly too.
+
+Decay (DESIGN.md Sec. 12): ``--decay exp`` (default; rate ``--lam``) or
+``--decay poly`` (power-law, exponent ``--beta``); ``--adaptive`` switches to
+the closed-loop controller (lambda driven by the prequential loss between
+``--lam-min`` and ``--lam-max``, starting at ``--lam``).
 
 Examples:
   PYTHONPATH=src python -m repro.launch.train --arch stablelm_12b \
       --preset smoke --ticks 30 --retrain-every 5 --scheme rtbs
   PYTHONPATH=src python -m repro.launch.train --arch mamba2_370m \
       --preset smoke --ticks 12 --retrain-every 4 --scheme drtbs --shards 8
+  PYTHONPATH=src python -m repro.launch.train --arch mamba2_370m \
+      --preset smoke --ticks 30 --scheme rtbs --adaptive
 """
 from __future__ import annotations
 
@@ -36,11 +46,14 @@ import jax
 import jax.numpy as jnp
 
 from repro import config as C
+from repro import decay as dk
 from repro.checkpoint import AsyncCheckpointer, latest_step, restore_checkpoint
 from repro.core.api import available_schemes, make_sampler
 from repro.data.streams import TokenDriftStream, mode_schedule
 from repro.manage import (
+    init_sharded_state,
     make_sgd_adapter,
+    make_sharded_resume_loop,
     make_sharded_run_loop,
     materialize_stream,
     shard_stream,
@@ -50,42 +63,91 @@ from repro.optim import AdamWConfig, adamw_init
 from repro.train.steps import make_train_step
 
 DISTRIBUTED_SCHEMES = ("drtbs", "dttbs")
+DECAY_FREE_SCHEMES = ("sw", "brs")
 
 
 def build_sampler(scheme: str, *, n: int, lam: float, batch_per_tick: int,
-                  shards: int = 1):
-    """Map the driver's knobs onto each scheme's hyperparameters."""
+                  shards: int = 1, decay=None):
+    """Map the driver's knobs onto each scheme's hyperparameters. ``decay``
+    (a DecaySchedule) replaces the scalar ``lam`` when given; ``lam`` still
+    sizes the B-TBS capacity bound (a rough steady-state proxy for
+    time-varying schedules)."""
+    dkw = {"lam": lam} if decay is None else {"decay": decay}
     if scheme == "rtbs":
-        return make_sampler("rtbs", n=n, lam=lam)
-    if scheme in ("sw", "brs"):
+        return make_sampler("rtbs", n=n, **dkw)
+    if scheme in DECAY_FREE_SCHEMES:
         return make_sampler(scheme, n=n)
     if scheme == "btbs":
         # B-TBS has NO size control (paper Alg. 4): steady-state E|S| is
         # b/(1-e^-lam), not --reservoir. Provision 3x that so the capacity
         # bound never silently distorts the time bias.
         steady = batch_per_tick / max(1.0 - math.exp(-lam), 1e-6)
-        return make_sampler("btbs", lam=lam, cap=max(n, int(3 * steady) + 1))
+        return make_sampler("btbs", cap=max(n, int(3 * steady) + 1), **dkw)
     if scheme == "ttbs":
-        return make_sampler("ttbs", n=n, lam=lam, batch_size=batch_per_tick)
+        return make_sampler("ttbs", n=n, batch_size=batch_per_tick, **dkw)
     if scheme == "drtbs":
         # cap_s covers the worst transient: every global full item plus this
         # shard's incoming batch landing on one shard before the downsample
-        return make_sampler("drtbs", n=n, lam=lam, cap_s=n + batch_per_tick)
+        return make_sampler("drtbs", n=n, cap_s=n + batch_per_tick, **dkw)
     if scheme == "dttbs":
         # per-shard targets: n/S sample rows fed by b/S arrivals per shard
         n_s = max(1, -(-n // shards))
         b_s = max(1.0, batch_per_tick / shards)
-        return make_sampler("dttbs", n=n_s, lam=lam, batch_size=b_s)
+        return make_sampler("dttbs", n=n_s, batch_size=b_s, **dkw)
     raise ValueError(f"unsupported scheme {scheme!r}; see {available_schemes()}")
 
 
-def run_sharded(args, adapter, stream, sampler):
-    """The Sec.-5 path: the whole run as ONE fused sharded-loop program.
+def build_decay(args):
+    """(DecaySchedule | None for the lam sugar, AdaptiveDecay | None)."""
+    if args.scheme in DECAY_FREE_SCHEMES:
+        if args.adaptive or args.decay != "exp":
+            raise SystemExit(
+                f"--scheme {args.scheme} has no decay to configure"
+            )
+        return None, None
+    controller = None
+    if args.adaptive:
+        lam_min = args.lam_min if args.lam_min is not None else args.lam / 20
+        lam_max = args.lam_max if args.lam_max is not None else \
+            min(1.5, args.lam * 20)
+        controller = dk.loss_ratio(lam0=args.lam, lam_min=lam_min,
+                                   lam_max=lam_max)
+    sched = None
+    if args.decay == "poly":
+        sched = dk.polynomial(args.beta)
+    return sched, controller
+
+
+def _log_sharded_trace(trace, t0, mode_of, log):
+    metric = jax.device_get(trace["metric"])
+    size = jax.device_get(trace["size"])
+    dec = jax.device_get(trace["decay"]) if "decay" in trace else None
+    for i in range(len(size)):
+        t = t0 + i
+        row = {"tick": t, "mode": mode_of(t), "eval_loss": float(metric[i]),
+               "sample_size": int(size[i])}
+        extra = ""
+        if dec is not None:
+            row["lam"] = float(-math.log(max(float(dec[i]), 1e-30)))
+            extra = f" lam={row['lam']:6.4f}"
+        log.append(row)
+        print(f"[train] tick={t:4d} mode={mode_of(t)} "
+              f"eval={float(metric[i]):7.4f} |S|={int(size[i]):5d}{extra}",
+              flush=True)
+
+
+def run_sharded(args, adapter, stream, sampler, controller=None):
+    """The Sec.-5 path: the run as fused sharded-loop program(s).
 
     Co-partitions every tick's batch over the ``data`` mesh, then executes
     stream -> per-shard sample update -> periodic retrain on the global view
-    -> prequential eval as a single jitted scan (no per-tick dispatch, no
-    checkpoint round-trips -- the trace is logged after the run).
+    -> prequential eval as jitted scans (no per-tick dispatch). Without
+    ``--ckpt-dir`` the whole stream is ONE program; with it, the stream is
+    consumed in ``--ckpt-every``-tick segments through the resume entry
+    point (:func:`repro.manage.make_sharded_resume_loop`), serializing the
+    replicated ``gather_tree`` snapshot after each segment -- ``--resume``
+    restarts bit-exactly (segmented and unsegmented runs produce identical
+    traces; tests/test_sharded_loop.py asserts the equivalence).
     """
     from repro.launch.mesh import make_data_mesh
 
@@ -101,28 +163,74 @@ def run_sharded(args, adapter, stream, sampler):
                                           batch_size=args.batch_per_tick,
                                           mode=mode_of)
     batches, bcounts = shard_stream(batches, bcounts, S)
-
     mesh = make_data_mesh(S)
-    run = make_sharded_run_loop(sampler, adapter, mesh,
-                                retrain_every=args.retrain_every,
-                                superbatch=args.superbatch)
-    print(f"[train] sharded {args.scheme} loop: {S} shards, "
-          f"{args.ticks} ticks, one fused program", flush=True)
-    state, model_state, trace = run(jax.random.key(args.seed), batches,
-                                    bcounts)
-    metric = jax.device_get(trace["metric"])
-    size = jax.device_get(trace["size"])
+    key = jax.random.key(args.seed)
     log = []
-    for t in range(args.ticks):
-        log.append({"tick": t, "mode": mode_of(t),
-                    "eval_loss": float(metric[t]),
-                    "sample_size": int(size[t])})
-        print(f"[train] tick={t:4d} mode={mode_of(t)} "
-              f"eval={float(metric[t]):7.4f} |S|={int(size[t]):5d}",
-              flush=True)
-    if args.ckpt_dir:
-        print("[train] note: checkpoint/resume is a local-loop feature; "
-              "the fused sharded run completed in one program")
+
+    if not args.ckpt_dir:
+        run = make_sharded_run_loop(sampler, adapter, mesh,
+                                    retrain_every=args.retrain_every,
+                                    superbatch=args.superbatch,
+                                    controller=controller)
+        print(f"[train] sharded {args.scheme} loop: {S} shards, "
+              f"{args.ticks} ticks, one fused program", flush=True)
+        _, _, trace = run(key, batches, bcounts)
+        _log_sharded_trace(trace, 0, mode_of, log)
+        return log
+
+    # checkpointed: ckpt_every-tick segments through the resume entry point
+    seg = -(-args.ckpt_every // args.retrain_every) * args.retrain_every
+    resume = make_sharded_resume_loop(sampler, adapter, mesh,
+                                      retrain_every=args.retrain_every,
+                                      superbatch=args.superbatch,
+                                      controller=controller)
+    from repro.manage.loop import item_proto
+
+    state = init_sharded_state(sampler, S, item_proto(batches))
+    params = adapter.init()
+    cstate = controller.init() if controller is not None else None
+    start_tick = 0
+    ckpt = AsyncCheckpointer(args.ckpt_dir)
+    if args.resume:
+        last = latest_step(args.ckpt_dir)
+        if last is not None:
+            like = (state, params, cstate, 0) if controller is not None \
+                else (state, params, 0)
+            tree = restore_checkpoint(args.ckpt_dir, last, like)
+            tree = jax.tree_util.tree_map(jnp.asarray, tree[:-1]) + (tree[-1],)
+            if controller is not None:
+                state, params, cstate = tree[:-1]
+            else:
+                state, params = tree[:-1]
+            start_tick = int(tree[-1])
+            print(f"[train] resumed sharded run from step {last} "
+                  f"(tick {start_tick})")
+    print(f"[train] sharded {args.scheme} loop: {S} shards, "
+          f"{args.ticks} ticks, {seg}-tick checkpointed segments", flush=True)
+
+    def cut(tree, lo, hi):
+        return jax.tree_util.tree_map(lambda a: a[lo:hi], tree)
+
+    for t0 in range(start_tick, args.ticks, seg):
+        t1 = min(t0 + seg, args.ticks)
+        if controller is not None:
+            state, params, cstate, trace = resume(
+                key, state, params, cstate, cut(batches, t0, t1),
+                bcounts[t0:t1], t0)
+            snap = (state, params, cstate, t1)
+        else:
+            state, params, trace = resume(
+                key, state, params, cut(batches, t0, t1), bcounts[t0:t1], t0)
+            snap = (state, params, t1)
+        _log_sharded_trace(trace, t0, mode_of, log)
+        # only retrain-cadence-aligned ticks are valid resume points (the
+        # resume loop requires t0 % G == 0 and G | retrain_every): skip a
+        # misaligned final partial segment -- a later --resume with more
+        # --ticks restarts from the last aligned save and replays the few
+        # tail ticks bit-exactly instead of failing the alignment check
+        if t1 % args.retrain_every == 0:
+            ckpt.save(t1, snap)
+    ckpt.wait()
     return log
 
 
@@ -139,6 +247,17 @@ def main(argv=None):
     ap.add_argument("--batch-per-tick", type=int, default=32)
     ap.add_argument("--reservoir", type=int, default=256)
     ap.add_argument("--lam", type=float, default=0.07)
+    ap.add_argument("--decay", default="exp", choices=["exp", "poly"],
+                    help="decay schedule: exp (rate --lam) or poly "
+                         "(power-law, exponent --beta; DESIGN.md Sec. 12)")
+    ap.add_argument("--beta", type=float, default=0.8,
+                    help="polynomial-decay exponent (--decay poly)")
+    ap.add_argument("--adaptive", action="store_true",
+                    help="closed-loop decay: drive lambda from the "
+                         "prequential loss (starts at --lam, clipped to "
+                         "[--lam-min, --lam-max])")
+    ap.add_argument("--lam-min", type=float, default=None)
+    ap.add_argument("--lam-max", type=float, default=None)
     ap.add_argument("--seq-len", type=int, default=64)
     ap.add_argument("--retrain-every", type=int, default=5)
     ap.add_argument("--superbatch", type=int, default=None,
@@ -198,27 +317,33 @@ def main(argv=None):
         retrain_steps=args.retrain_steps,
         name=args.arch,
     )
+    sched, controller = build_decay(args)
     sampler = build_sampler(args.scheme, n=args.reservoir, lam=args.lam,
                             batch_per_tick=args.batch_per_tick,
-                            shards=args.shards)
+                            shards=args.shards, decay=sched)
     if args.scheme in DISTRIBUTED_SCHEMES:
-        return run_sharded(args, adapter, stream, sampler)
+        return run_sharded(args, adapter, stream, sampler, controller)
 
     fit = jax.jit(adapter.fit)
     eval_fn = jax.jit(adapter.evaluate)
     proto = jax.ShapeDtypeStruct((args.seq_len,), jnp.int32)
     st = sampler.init(proto)
     model_state = adapter.init()
+    cstate = controller.init() if controller is not None else None
     start_tick = 0
 
     ckpt = AsyncCheckpointer(args.ckpt_dir) if args.ckpt_dir else None
     if args.resume and args.ckpt_dir:
         last = latest_step(args.ckpt_dir)
         if last is not None:
-            tree = restore_checkpoint(
-                args.ckpt_dir, last, (model_state, st, 0)
-            )
-            model_state, st, start_tick = tree
+            like = (model_state, st, cstate, 0) if controller is not None \
+                else (model_state, st, 0)
+            tree = restore_checkpoint(args.ckpt_dir, last, like)
+            if controller is not None:
+                model_state, st, cstate, start_tick = tree
+                cstate = jax.tree_util.tree_map(jnp.asarray, cstate)
+            else:
+                model_state, st, start_tick = tree
             model_state = jax.tree_util.tree_map(jnp.asarray, model_state)
             st = jax.tree_util.tree_map(jnp.asarray, st)
             start_tick = int(start_tick)
@@ -232,9 +357,20 @@ def main(argv=None):
         # prequential eval BEFORE the model sees this data
         eval_loss = float(eval_fn(model_state, batch, args.batch_per_tick))
 
-        # sample update (the paper's technique)
+        # sample update (the paper's technique); with --adaptive the
+        # controller's current rate drives the step and the prequential loss
+        # feeds back (adjustment gated on retrain ticks, as in the fused loop)
         key_t = jax.random.fold_in(jax.random.key(args.seed + 1), t)
-        st = sampler.step(key_t, st, batch, jnp.int32(args.batch_per_tick))
+        if controller is not None:
+            d_t = controller.rate(cstate)
+            st = sampler.step_decayed(key_t, st, batch,
+                                      jnp.int32(args.batch_per_tick), d_t)
+            cstate = controller.observe(
+                cstate, jnp.float32(eval_loss),
+                (t + 1) % args.retrain_every == 0)
+        else:
+            st = sampler.step(key_t, st, batch,
+                              jnp.int32(args.batch_per_tick))
 
         # ONE realization per tick: the logged |S| is the sample fit trains on
         k_ex, k_fit = jax.random.split(
@@ -252,17 +388,25 @@ def main(argv=None):
             )
 
         # every scheme's state carries W_t (decayed weight for rtbs/ttbs/btbs,
-        # item count for brs/sw)
-        total_w = float(st.total_weight)
-        log.append({"tick": t, "mode": mode, "eval_loss": eval_loss,
-                    "train_loss": train_loss, "sample_size": size,
-                    "total_weight": total_w})
+        # item count for brs/sw); time-varying schedules wrap it
+        raw = st.inner if isinstance(st, dk.DecayedState) else st
+        total_w = float(raw.total_weight)
+        row = {"tick": t, "mode": mode, "eval_loss": eval_loss,
+               "train_loss": train_loss, "sample_size": size,
+               "total_weight": total_w}
+        extra = ""
+        if controller is not None:
+            row["lam"] = float(jnp.exp(cstate.loglam))
+            extra = f" lam={row['lam']:6.4f}"
+        log.append(row)
         print(f"[train] tick={t:4d} mode={mode} eval={eval_loss:7.4f} "
-              f"train={train_loss:7.4f} |S|={size:5d} W={total_w:8.2f}",
-              flush=True)
+              f"train={train_loss:7.4f} |S|={size:5d} W={total_w:8.2f}"
+              f"{extra}", flush=True)
 
         if ckpt and (t + 1) % args.ckpt_every == 0:
-            ckpt.save(t + 1, (model_state, st, t + 1))
+            snap = (model_state, st, cstate, t + 1) \
+                if controller is not None else (model_state, st, t + 1)
+            ckpt.save(t + 1, snap)
     if ckpt:
         ckpt.wait()
     return log

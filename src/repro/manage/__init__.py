@@ -12,6 +12,7 @@ from .loop import (  # noqa: F401
     make_run_farm,
     make_run_loop,
     make_sharded_manage_step,
+    make_sharded_resume_loop,
     make_sharded_run_farm,
     make_sharded_run_loop,
     materialize_stream,

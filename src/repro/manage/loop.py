@@ -40,8 +40,18 @@ at cluster scale (DESIGN.md Sec. 10):
     the fused loop, and the benchmark's comparison point.
   * :func:`make_sharded_run_farm` -- Monte-Carlo trials ``vmap``-ed INSIDE the
     shard_map over replicated trial keys, sharing one co-partitioned stream.
+  * :func:`make_sharded_resume_loop` -- checkpoint/resume for the fused
+    sharded run: consume a ``gather_tree`` snapshot + a global start tick and
+    continue bit-exactly (the key discipline below makes this trivial).
   * :func:`shard_stream` -- re-pack a :func:`materialize_stream` output into
     co-partitioned per-shard segments ([T, S*bcap_s, ...] / [T, S]).
+
+Closed-loop adaptive decay (DESIGN.md Sec. 12): every loop builder accepts
+``controller=`` (a :class:`repro.decay.AdaptiveDecay`); the controller's rate
+drives ``sampler.step_decayed`` each tick, the prequential metric feeds the
+controller back, and the rate adjustment is gated on retrain ticks -- all
+inside the same compiled scan, superbatch-compatible, with the applied
+factor logged in the trace under ``"decay"``.
 
 Key discipline (bit-exact replays, and what tests assert): tick t uses
 ``fold_in(key, t)`` split into (step, extract, fit) subkeys, so a fused run,
@@ -99,6 +109,16 @@ def _check_sharded(sampler: Sampler) -> None:
         )
 
 
+def _check_controllable(sampler: Sampler) -> None:
+    if sampler.step_decayed is None:
+        raise ValueError(
+            f"sampler {sampler.scheme!r} has no decay to control (no "
+            "step_decayed closure) -- the adaptive controller drives the "
+            "time-biased schemes (rtbs/ttbs/btbs/drtbs/dttbs), not the "
+            "decay-free baselines"
+        )
+
+
 def _effective_superbatch(superbatch: int | None, retrain_every: int) -> int:
     """Resolve the superbatch chunk size G: the largest divisor of
     ``retrain_every`` not exceeding the requested size. G must divide
@@ -136,9 +156,71 @@ def _make_fast_tick(sampler: Sampler, model: ModelAdapter) -> Callable:
     return fast
 
 
+def _make_controlled_ticks(sampler: Sampler, model: ModelAdapter,
+                           controller, retrain_every: int,
+                           metric_fn: Callable | None = None,
+                           extract_attr: str = "extract",
+                           size_attr: str = "size") -> tuple[Callable, Callable]:
+    """Carry-form (full, fast) ticks with a closed-loop decay controller
+    (:mod:`repro.decay.adaptive`) in the loop: carry is ``(state, params,
+    cstate)``.  Per tick the controller's current rate feeds
+    ``sampler.step_decayed`` and the prequential metric feeds
+    ``controller.observe``; the lambda *adjustment* is gated on retrain ticks
+    (``adjust = do_fit``), so the controller only reacts at the cadence where
+    the loss can actually respond to a rate change.  The fast tick passes a
+    static ``adjust=False`` -- same arithmetic as the full tick's traced
+    False, so superbatched runs stay bit-identical to G=1.  The per-tick
+    factor ``d_t`` is logged in the trace under ``"decay"``.
+
+    ``metric_fn``/``extract_attr``/``size_attr`` let the sharded loop reuse
+    this skeleton with its psum'd metric and global extract closures.
+    """
+    metric_of = metric_fn or (
+        lambda params, b, c: model.evaluate(params, b, c)
+    )
+    extract = getattr(sampler, extract_attr)
+    size = getattr(sampler, size_attr)
+
+    def full(key, t, carry, batch_items, bcount):
+        state, params, cstate = carry
+        k_step, k_extract, k_fit = tick_keys(key, t)
+        metric = metric_of(params, batch_items, bcount)
+        d = controller.rate(cstate)
+        state = sampler.step_decayed(k_step, state, batch_items, bcount, d)
+        do_fit = (t + 1) % retrain_every == 0
+        cstate = controller.observe(cstate, metric, do_fit)
+        params = jax.lax.cond(
+            do_fit,
+            lambda: model.fit(k_fit, params, extract(k_extract, state)),
+            lambda: params,
+        )
+        m = {"metric": metric, "size": size(k_extract, state), "decay": d}
+        return (state, params, cstate), m
+
+    def fast(key, t, carry, batch_items, bcount):
+        state, params, cstate = carry
+        k_step, k_extract, _ = tick_keys(key, t)
+        metric = metric_of(params, batch_items, bcount)
+        d = controller.rate(cstate)
+        state = sampler.step_decayed(k_step, state, batch_items, bcount, d)
+        cstate = controller.observe(cstate, metric, False)
+        m = {"metric": metric, "size": size(k_extract, state), "decay": d}
+        return (state, params, cstate), m
+
+    return full, fast
+
+
 def _superbatched_scan(tick: Callable, fast: Callable, G: int) -> Callable:
     """The chunked-scan skeleton shared by the local and sharded loops:
-    ``scan(key, state0, params0, batches, bcounts) -> (state, params, trace)``.
+    ``scan(key, carry0, batches, bcounts, t0=0) -> (carry, trace)``.
+
+    ``tick``/``fast`` operate on an opaque loop carry -- ``(key, t, carry,
+    batch, bcount) -> (carry, metrics)`` -- so the same skeleton serves the
+    plain (state, params) loops and the controller-augmented ones. ``t0``
+    offsets the global tick index (checkpoint/resume: the resumed segment
+    replays ``fold_in(key, t0 + i)`` exactly as the unbroken run would);
+    callers must keep ``t0 % G == 0`` so chunk boundaries stay aligned with
+    the retrain cadence.
 
     Scans T//G chunks of G ticks; within a chunk the first G-1 ticks run the
     cond-free ``fast`` path (G divides the retrain cadence, so only the last
@@ -146,10 +228,11 @@ def _superbatched_scan(tick: Callable, fast: Callable, G: int) -> Callable:
     last runs the full ``tick``. Tail ticks (T % G) run ``tick`` unrolled
     after the scan. Bit-identical to the G=1 per-tick scan for any G."""
 
-    def scan(key, state0, params0, batches, bcounts):
+    def scan(key, carry0, batches, bcounts, t0=0):
         T = bcounts.shape[0]
         nchunks = T // G
         Tm = nchunks * G
+        t0 = jnp.asarray(t0, jnp.int32)
 
         def at(tree, idx):
             return jax.tree_util.tree_map(lambda a: a[idx], tree)
@@ -158,21 +241,19 @@ def _superbatched_scan(tick: Callable, fast: Callable, G: int) -> Callable:
             return a[:Tm].reshape((nchunks, G) + a.shape[1:])
 
         def chunk_body(carry, inp):
-            state, params = carry
             ct, cb, cc = inp
             ms = []
             for g in range(G - 1):       # unrolled, no retrain conditional
-                state, m = fast(key, ct[g], state, params, at(cb, g), cc[g])
+                carry, m = fast(key, ct[g], carry, at(cb, g), cc[g])
                 ms.append(m)
-            state, params, m = tick(key, ct[G - 1], state, params,
-                                    at(cb, G - 1), cc[G - 1])
+            carry, m = tick(key, ct[G - 1], carry, at(cb, G - 1), cc[G - 1])
             ms.append(m)
             metrics = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *ms)
-            return (state, params), metrics
+            return carry, metrics
 
-        (state, params), trace = jax.lax.scan(
-            chunk_body, (state0, params0),
-            (chunk(jnp.arange(T, dtype=jnp.int32)),
+        carry, trace = jax.lax.scan(
+            chunk_body, carry0,
+            (chunk(t0 + jnp.arange(T, dtype=jnp.int32)),
              jax.tree_util.tree_map(chunk, batches), chunk(bcounts)),
         )
         trace = jax.tree_util.tree_map(
@@ -180,17 +261,32 @@ def _superbatched_scan(tick: Callable, fast: Callable, G: int) -> Callable:
         )
         tails = []
         for t in range(Tm, T):
-            state, params, m = tick(key, jnp.int32(t), state, params,
-                                    at(batches, t), bcounts[t])
+            carry, m = tick(key, t0 + jnp.int32(t), carry,
+                            at(batches, t), bcounts[t])
             tails.append(m)
         if tails:
             tailm = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *tails)
             trace = jax.tree_util.tree_map(
                 lambda a, b: jnp.concatenate([a, b]), trace, tailm
             )
-        return state, params, trace
+        return carry, trace
 
     return scan
+
+
+def _pair_carry(tick: Callable, fast: Callable) -> tuple[Callable, Callable]:
+    """Adapt the public (state, params)-signature tick builders to the
+    opaque-carry contract of :func:`_superbatched_scan`."""
+
+    def tick_c(key, t, carry, batch_items, bcount):
+        state, params, m = tick(key, t, carry[0], carry[1], batch_items, bcount)
+        return (state, params), m
+
+    def fast_c(key, t, carry, batch_items, bcount):
+        state, m = fast(key, t, carry[0], carry[1], batch_items, bcount)
+        return (state, carry[1]), m
+
+    return tick_c, fast_c
 
 
 def make_manage_step(sampler: Sampler, model: ModelAdapter, *,
@@ -248,7 +344,8 @@ def _memoized(kind: str, key: tuple, build: Callable[[], Callable]) -> Callable:
 
 def make_run_loop(sampler: Sampler, model: ModelAdapter, *,
                   retrain_every: int = 1,
-                  superbatch: int | None = None) -> Callable:
+                  superbatch: int | None = None,
+                  controller=None) -> Callable:
     """Compile the full-stream loop once.
 
     Returns ``run(key, batches, bcounts) -> (state, params, trace)`` where
@@ -264,54 +361,79 @@ def make_run_loop(sampler: Sampler, model: ModelAdapter, *,
     per-iteration dispatch) once per chunk instead of once per tick. Results
     are bit-identical for any G (asserted in tests).
 
-    Memoized on ``(sampler, model, retrain_every, superbatch)``: repeat calls
-    return the same compiled callable.
+    ``controller`` (a :class:`repro.decay.AdaptiveDecay`) closes the loop
+    between the prequential metric and the sampler's decay rate INSIDE the
+    same compiled scan (DESIGN.md Sec. 12): each tick the controller's
+    current rate drives ``sampler.step_decayed`` and the metric updates the
+    controller; the rate adjustment itself is gated on retrain ticks. The
+    trace gains a per-tick ``"decay"`` entry (the applied factor d_t). The
+    sampler must be decay-capable (rtbs/ttbs/btbs); without a controller the
+    program is exactly the historical one.
+
+    Memoized on ``(sampler, model, retrain_every, superbatch, controller)``:
+    repeat calls return the same compiled callable.
     """
     return _memoized(
-        "run_loop", (sampler, model, retrain_every, superbatch),
-        lambda: _build_run_loop(sampler, model, retrain_every, superbatch),
+        "run_loop", (sampler, model, retrain_every, superbatch, controller),
+        lambda: _build_run_loop(sampler, model, retrain_every, superbatch,
+                                controller),
     )
 
 
 def _build_run_loop(sampler: Sampler, model: ModelAdapter,
-                    retrain_every: int, superbatch: int | None) -> Callable:
-    tick = make_manage_step(sampler, model, retrain_every=retrain_every)
-    fast = _make_fast_tick(sampler, model)
+                    retrain_every: int, superbatch: int | None,
+                    controller=None) -> Callable:
+    if controller is None:
+        tick, fast = _pair_carry(
+            make_manage_step(sampler, model, retrain_every=retrain_every),
+            _make_fast_tick(sampler, model),
+        )
+    else:
+        _check_local(sampler)
+        _check_controllable(sampler)
+        tick, fast = _make_controlled_ticks(sampler, model, controller,
+                                            retrain_every)
     scan = _superbatched_scan(
         tick, fast, _effective_superbatch(superbatch, retrain_every)
     )
 
     @jax.jit
     def run(key, batches, bcounts):
-        return scan(key, sampler.init(item_proto(batches)), model.init(),
-                    batches, bcounts)
+        carry0 = (sampler.init(item_proto(batches)), model.init())
+        if controller is not None:
+            carry0 = carry0 + (controller.init(),)
+        carry, trace = scan(key, carry0, batches, bcounts)
+        return carry[0], carry[1], trace
 
     return run
 
 
 def run_loop(key: jax.Array, sampler: Sampler, model: ModelAdapter,
              batches: Any, bcounts: jax.Array, *, retrain_every: int = 1,
-             superbatch: int | None = None):
+             superbatch: int | None = None, controller=None):
     """One-shot convenience wrapper over :func:`make_run_loop`."""
     return make_run_loop(sampler, model, retrain_every=retrain_every,
-                         superbatch=superbatch)(key, batches, bcounts)
+                         superbatch=superbatch,
+                         controller=controller)(key, batches, bcounts)
 
 
 def make_run_farm(sampler: Sampler, model: ModelAdapter, *,
                   retrain_every: int = 1,
-                  superbatch: int | None = None) -> Callable:
+                  superbatch: int | None = None,
+                  controller=None) -> Callable:
     """Monte-Carlo farm: ``farm(key, trials, batches, bcounts) -> trace``.
 
     ``vmap`` of the fused loop over ``trials`` independent sampler/model
     randomness streams sharing one data stream; trace leaves gain a leading
     [trials] axis. This is the Fig. 12/13 robustness protocol (mean + expected
     shortfall over realizations) as one compiled program. Memoized like
-    :func:`make_run_loop`.
+    :func:`make_run_loop`; ``controller`` is threaded through unchanged (each
+    trial carries its own controller state).
     """
 
     def build():
         run = make_run_loop(sampler, model, retrain_every=retrain_every,
-                            superbatch=superbatch)
+                            superbatch=superbatch, controller=controller)
 
         def farm(key, trials: int, batches, bcounts):
             keys = jax.random.split(key, trials)
@@ -321,16 +443,19 @@ def make_run_farm(sampler: Sampler, model: ModelAdapter, *,
         return farm
 
     return _memoized(
-        "run_farm", (sampler, model, retrain_every, superbatch), build
+        "run_farm", (sampler, model, retrain_every, superbatch, controller),
+        build
     )
 
 
 def run_farm(key: jax.Array, trials: int, sampler: Sampler,
              model: ModelAdapter, batches: Any, bcounts: jax.Array, *,
-             retrain_every: int = 1, superbatch: int | None = None):
+             retrain_every: int = 1, superbatch: int | None = None,
+             controller=None):
     """One-shot convenience wrapper over :func:`make_run_farm`."""
     return make_run_farm(sampler, model, retrain_every=retrain_every,
-                         superbatch=superbatch)(key, trials, batches, bcounts)
+                         superbatch=superbatch,
+                         controller=controller)(key, trials, batches, bcounts)
 
 
 # ---------------------------------------------------------------------------
@@ -354,16 +479,11 @@ def _make_sharded_tick(sampler: Sampler, model: ModelAdapter,
       * the per-tick size metric takes the payload-free ``size_global`` path
         (extract_global's all_gather only runs on retrain ticks).
     """
-    axis = distributed.AXIS
+    metric_of = _psum_metric(model)
 
     def tick(key, t, state, params, batch_items, bcount):
         k_step, k_extract, k_fit = tick_keys(key, t)
-        m_s = model.evaluate(params, batch_items, bcount)
-        w_s = jnp.asarray(bcount, jnp.float32)
-        num = jax.lax.psum(jnp.where(bcount > 0, m_s, 0.0) * w_s, axis)
-        den = jax.lax.psum(w_s, axis)
-        metric = jnp.where(den > 0, num / jnp.maximum(den, 1.0),
-                           jnp.float32(jnp.nan))
+        metric = metric_of(params, batch_items, bcount)
 
         state = sampler.step(k_step, state, batch_items, bcount)
 
@@ -381,20 +501,32 @@ def _make_sharded_tick(sampler: Sampler, model: ModelAdapter,
     return tick
 
 
-def _make_sharded_fast_tick(sampler: Sampler, model: ModelAdapter) -> Callable:
-    """Sharded analogue of :func:`_make_fast_tick`: the per-shard tick without
-    the retrain conditional (no extract_global all_gather in the trace) --
-    the superbatched chunk's non-retrain fast path."""
+def _psum_metric(model: ModelAdapter) -> Callable:
+    """The sharded loops' prequential metric: |B_t|-weighted psum of
+    per-shard metrics over the data axis (NaN only when the GLOBAL tick is
+    empty)."""
     axis = distributed.AXIS
 
-    def fast(key, t, state, params, batch_items, bcount):
-        k_step, k_extract, _ = tick_keys(key, t)
+    def metric_of(params, batch_items, bcount):
         m_s = model.evaluate(params, batch_items, bcount)
         w_s = jnp.asarray(bcount, jnp.float32)
         num = jax.lax.psum(jnp.where(bcount > 0, m_s, 0.0) * w_s, axis)
         den = jax.lax.psum(w_s, axis)
-        metric = jnp.where(den > 0, num / jnp.maximum(den, 1.0),
-                           jnp.float32(jnp.nan))
+        return jnp.where(den > 0, num / jnp.maximum(den, 1.0),
+                         jnp.float32(jnp.nan))
+
+    return metric_of
+
+
+def _make_sharded_fast_tick(sampler: Sampler, model: ModelAdapter) -> Callable:
+    """Sharded analogue of :func:`_make_fast_tick`: the per-shard tick without
+    the retrain conditional (no extract_global all_gather in the trace) --
+    the superbatched chunk's non-retrain fast path."""
+    metric_of = _psum_metric(model)
+
+    def fast(key, t, state, params, batch_items, bcount):
+        k_step, k_extract, _ = tick_keys(key, t)
+        metric = metric_of(params, batch_items, bcount)
         state = sampler.step(k_step, state, batch_items, bcount)
         size = sampler.size_global(k_extract, state)
         return state, {"metric": metric, "size": size}
@@ -411,9 +543,26 @@ def _sharded_in_specs(axis):
     return (P(), P(None, axis), P(None, axis))
 
 
+def _make_controlled_sharded_ticks(sampler: Sampler, model: ModelAdapter,
+                                   controller,
+                                   retrain_every: int) -> tuple[Callable, Callable]:
+    """Sharded controller ticks: the :func:`_make_controlled_ticks` skeleton
+    with the psum'd metric and the global extract/size closures. The metric
+    fed to ``controller.observe`` is the replicated global one and the
+    controller update is deterministic, so the controller state stays
+    replicated across shards by construction."""
+    return _make_controlled_ticks(
+        sampler, model, controller, retrain_every,
+        metric_fn=_psum_metric(model),
+        extract_attr="extract_global",
+        size_attr="size_global",
+    )
+
+
 def make_sharded_run_loop(sampler: Sampler, model: ModelAdapter, mesh, *,
                           retrain_every: int = 1,
-                          superbatch: int | None = None) -> Callable:
+                          superbatch: int | None = None,
+                          controller=None) -> Callable:
     """Compile the paper's model-management loop for a sharded sampler.
 
     Returns ``run(key, batches, bcounts) -> (state, params, trace)``:
@@ -436,14 +585,20 @@ def make_sharded_run_loop(sampler: Sampler, model: ModelAdapter, mesh, *,
     cross shards only inside ``extract_global`` on retrain ticks.
     ``superbatch`` chunks the scan exactly as in :func:`make_run_loop` (the
     non-retrain fast ticks additionally drop the retrain-gated all_gather
-    from their trace). Memoized on ``(sampler, model, mesh, retrain_every,
-    superbatch)``.
+    from their trace). ``controller`` threads the closed-loop decay
+    controller exactly as in :func:`make_run_loop` -- it observes the psum'd
+    global metric, so its state stays replicated. Memoized on ``(sampler,
+    model, mesh, retrain_every, superbatch, controller)``.
     """
     _check_sharded(sampler)
+    if controller is not None:
+        _check_controllable(sampler)
     return _memoized(
-        "sharded_run_loop", (sampler, model, mesh, retrain_every, superbatch),
+        "sharded_run_loop",
+        (sampler, model, mesh, retrain_every, superbatch, controller),
         lambda: jax.jit(distributed.shard_map(
-            _sharded_loop_body(sampler, model, retrain_every, superbatch),
+            _sharded_loop_body(sampler, model, retrain_every, superbatch,
+                               controller),
             mesh=mesh,
             in_specs=_sharded_in_specs(distributed.AXIS),
             out_specs=_replicated_out_specs(),
@@ -460,23 +615,30 @@ def _replicated_out_specs():
 
 def _sharded_loop_body(sampler: Sampler, model: ModelAdapter,
                        retrain_every: int,
-                       superbatch: int | None = None) -> Callable:
+                       superbatch: int | None = None,
+                       controller=None) -> Callable:
     """Per-shard whole-stream program: superbatched scan of the sharded tick
     (the :func:`_superbatched_scan` skeleton, same chunking contract as
     :func:`_build_run_loop`)."""
+    if controller is None:
+        tick, fast = _pair_carry(
+            _make_sharded_tick(sampler, model, retrain_every),
+            _make_sharded_fast_tick(sampler, model),
+        )
+    else:
+        tick, fast = _make_controlled_sharded_ticks(sampler, model,
+                                                    controller, retrain_every)
     scan = _superbatched_scan(
-        _make_sharded_tick(sampler, model, retrain_every),
-        _make_sharded_fast_tick(sampler, model),
-        _effective_superbatch(superbatch, retrain_every),
+        tick, fast, _effective_superbatch(superbatch, retrain_every)
     )
 
     def loop(key, batches, bcounts):
         # per-shard views: batch leaves [T, bcap_s, ...], bcounts [T, 1]
-        state, params, trace = scan(
-            key, sampler.init(item_proto(batches)), model.init(),
-            batches, bcounts[:, 0],
-        )
-        return distributed.gather_tree(state), params, trace
+        carry0 = (sampler.init(item_proto(batches)), model.init())
+        if controller is not None:
+            carry0 = carry0 + (controller.init(),)
+        carry, trace = scan(key, carry0, batches, bcounts[:, 0])
+        return distributed.gather_tree(carry[0]), carry[1], trace
 
     return loop
 
@@ -528,7 +690,8 @@ def make_sharded_manage_step(sampler: Sampler, model: ModelAdapter, mesh, *,
 
 def make_sharded_run_farm(sampler: Sampler, model: ModelAdapter, mesh, *,
                           retrain_every: int = 1,
-                          superbatch: int | None = None) -> Callable:
+                          superbatch: int | None = None,
+                          controller=None) -> Callable:
     """Monte-Carlo farm of the sharded loop: ``farm(key, trials, batches,
     bcounts) -> (states, params, trace)`` with a leading [trials] axis on
     every output leaf.
@@ -536,12 +699,16 @@ def make_sharded_run_farm(sampler: Sampler, model: ModelAdapter, mesh, *,
     Trials are ``vmap``-ed INSIDE the shard_map over replicated trial keys
     (one co-partitioned stream shared by all trials), so the collectives
     batch across trials instead of re-entering the mesh per trial -- the
-    Fig. 12/13 robustness protocol at cluster scale.
+    Fig. 12/13 robustness protocol at cluster scale. ``controller`` threads
+    the closed-loop decay controller per trial, as in :func:`make_run_farm`.
     """
     _check_sharded(sampler)
+    if controller is not None:
+        _check_controllable(sampler)
 
     def build():
-        loop = _sharded_loop_body(sampler, model, retrain_every, superbatch)
+        loop = _sharded_loop_body(sampler, model, retrain_every, superbatch,
+                                  controller)
 
         def farm_shard(keys, batches, bcounts):
             return jax.vmap(lambda k: loop(k, batches, bcounts))(keys)
@@ -559,7 +726,93 @@ def make_sharded_run_farm(sampler: Sampler, model: ModelAdapter, mesh, *,
         return farm
 
     return _memoized(
-        "sharded_run_farm", (sampler, model, mesh, retrain_every, superbatch),
+        "sharded_run_farm",
+        (sampler, model, mesh, retrain_every, superbatch, controller),
+        build
+    )
+
+
+def make_sharded_resume_loop(sampler: Sampler, model: ModelAdapter, mesh, *,
+                             retrain_every: int = 1,
+                             superbatch: int | None = None,
+                             controller=None) -> Callable:
+    """The sharded loop's checkpoint/resume entry point: continue a fused
+    sharded run from its replicated :func:`~repro.core.distributed.gather_tree`
+    snapshot.
+
+    Returns ``run(key, snapshot, params, batches, bcounts, t0) -> (snapshot,
+    params, trace)`` (with ``controller``: ``run(key, snapshot, params,
+    cstate, batches, bcounts, t0) -> (snapshot, params, cstate, trace)``):
+
+      * ``snapshot``: the replicated gathered sampler state exactly as the
+        fused run / :func:`init_sharded_state` return it (leading [S] axis on
+        every leaf; each shard slices its own row back out on entry);
+      * ``batches``/``bcounts``: the co-partitioned SEGMENT to consume, laid
+        out as for :func:`make_sharded_run_loop`;
+      * ``t0``: the global tick index of the segment's first batch -- the
+        loop replays ``fold_in(key, t0 + i)``, so running ``[0, T)`` in one
+        go and running ``[0, T1) + [T1, T)`` through this entry point are
+        bit-identical (asserted in tests/test_sharded_loop.py). ``t0`` must
+        be a concrete int and a multiple of the superbatch chunk G (checked
+        here; keep checkpoint boundaries on the retrain cadence and this
+        holds for free).
+
+    Serialize ``(snapshot, params[, cstate], next_tick)`` with
+    :mod:`repro.checkpoint` for durable restarts -- ``launch/train.py``
+    wires exactly that for ``--scheme drtbs|dttbs --ckpt-dir``. Memoized
+    like the other builders; ``t0`` is a traced operand, so resuming from
+    different ticks reuses one compiled program.
+    """
+    _check_sharded(sampler)
+    if controller is not None:
+        _check_controllable(sampler)
+
+    def build():
+        from jax.sharding import PartitionSpec as P
+
+        G = _effective_superbatch(superbatch, retrain_every)
+        axis = distributed.AXIS
+        if controller is None:
+            tick, fast = _pair_carry(
+                _make_sharded_tick(sampler, model, retrain_every),
+                _make_sharded_fast_tick(sampler, model),
+            )
+        else:
+            tick, fast = _make_controlled_sharded_ticks(
+                sampler, model, controller, retrain_every
+            )
+        scan = _superbatched_scan(tick, fast, G)
+
+        def body(key, snapshot, params, aux, batches, bcounts, t0):
+            me = jax.lax.axis_index(axis)
+            state = jax.tree_util.tree_map(lambda a: a[me], snapshot)
+            carry0 = (state, params) + aux
+            carry, trace = scan(key, carry0, batches, bcounts[:, 0], t0)
+            return (distributed.gather_tree(carry[0]),) + carry[1:] + (trace,)
+
+        nout = 3 if controller is None else 4
+        jitted = jax.jit(distributed.shard_map(
+            body, mesh=mesh,
+            in_specs=(P(), P(), P(), P(), P(None, axis), P(None, axis), P()),
+            out_specs=(P(),) * nout,
+        ))
+
+        def run(key, snapshot, params, *rest):
+            *aux, batches, bcounts, t0 = rest
+            if int(t0) % G:
+                raise ValueError(
+                    f"resume tick t0={int(t0)} must be a multiple of the "
+                    f"superbatch chunk G={G}, or chunk boundaries would "
+                    "drift off the retrain cadence"
+                )
+            return jitted(key, snapshot, params, tuple(aux), batches,
+                          bcounts, jnp.int32(t0))
+
+        return run
+
+    return _memoized(
+        "sharded_resume_loop",
+        (sampler, model, mesh, retrain_every, superbatch, controller),
         build
     )
 
