@@ -1,0 +1,186 @@
+"""Bank-step throughput: the fused keyed bank vs naive per-key dispatch.
+
+Times ONE bank tick (route + vmapped tick maps + banked payload pass) on a
+Zipf-keyed batch at growing key counts K with the TOTAL batch fixed -- the
+multi-tenant serving shape (EXPERIMENTS.md §Bank-throughput):
+
+  * ``bank_rtbs_fused_K*`` / ``bank_ttbs_fused_K*`` --
+    :func:`repro.bank.make_bank`'s step: work proportional to the batch
+    (<= b touched keys advance; the other K - b keys take the O(K)
+    pure-decay pending multiply).
+  * ``bank_rtbs_vmap_ref_K*`` -- the baseline a naive implementation pays:
+    ``vmap`` of :func:`repro.core.rtbs.step_ref` advancing EVERY key every
+    tick over dense per-key routed sub-batches (empty for most keys), i.e.
+    O(K * cap) payload work + K argsorts per tick. The dense routing is
+    precomputed OUTSIDE the timed region (flattering the baseline).
+
+The acceptance criterion (ISSUE 5): the fused bank beats the vmap-of-ref
+baseline by >= 2x at K >= 4096 on CPU; ``speedup_vs_ref`` is recorded on
+the fused rtbs rows. Emits ``BENCH_bank_step.json`` at the repo root.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.bank import make_bank, route, subbatches
+from repro.core import rtbs
+
+from .common import smoke_mode, write_bench_json
+
+LAM = 0.05
+D = 8
+
+
+def _zipf_keys(rs, K, b, alpha=1.1):
+    w = (1.0 + np.arange(K)) ** -alpha
+    return rs.choice(K, size=b, p=w / w.sum()).astype(np.int32)
+
+
+def _time(fn, *args, iters=10):
+    for _ in range(2):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.min(ts) * 1e6)
+
+
+def _dense_routed(keys, payload, K, bcap):
+    """The baseline's input: every key's sub-batch as dense [K, bcap, D]
+    rows + [K] counts (zero for the untouched majority)."""
+    b = keys.shape[0]
+    r = route(jnp.asarray(keys), jnp.int32(b), num_keys=K, bcap=bcap)
+    sub = subbatches(r, payload, bcap=bcap)
+    nt = int(r.ntouched)
+    touched = np.asarray(r.touched)[:nt]
+    dense = np.zeros((K, bcap, payload.shape[-1]), np.float32)
+    counts = np.zeros((K,), np.int32)
+    dense[touched] = np.asarray(sub)[:nt]
+    counts[touched] = np.asarray(r.counts)[:nt]
+    return jnp.asarray(dense), jnp.asarray(counts), nt
+
+
+def bank_rows(K: int, b: int, cap_n: int, bcap: int, *, iters: int,
+              with_baseline: bool):
+    rs = np.random.RandomState(K)
+    keys = jnp.asarray(_zipf_keys(rs, K, b))
+    payload = jnp.asarray(rs.randn(b, D), np.float32)
+    proto = jax.ShapeDtypeStruct((D,), jnp.float32)
+    key0 = jax.random.key(0)
+
+    rows = []
+    fused_us = {}
+    for scheme, hyper in [
+        ("rtbs", dict(n=cap_n)),
+        ("ttbs", dict(n=cap_n, batch_size=max(1.0, b / K), cap=cap_n + 1)),
+    ]:
+        bank = make_bank(scheme, num_keys=K, lam=LAM, bcap=bcap, **hyper)
+        step = jax.jit(bank.step)
+        st = bank.init(proto)
+        for t in range(4):  # warm into a populated steady state
+            st = step(jax.random.fold_in(key0, t), st, keys, payload,
+                      jnp.int32(b))
+        nt = int(route(keys, jnp.int32(b), num_keys=K, bcap=bcap).ntouched)
+        us = _time(lambda k: step(k, st, keys, payload, jnp.int32(b)),
+                   jax.random.fold_in(key0, 99), iters=iters)
+        fused_us[scheme] = us
+        rows.append((
+            f"bank_{scheme}_fused_K{K}", us,
+            {"scheme": scheme, "impl": "fused", "K": K, "cap": cap_n,
+             "bcap": bcap, "batch": b, "keys_touched": nt,
+             "keys_per_s": round(nt * 1e6 / us, 1),
+             "items_per_s": round(b * 1e6 / us, 1)},
+        ))
+
+        # the production shape: ticks scanned, so the [K, cap, D] stack
+        # updates in place (the scan carry aliases) instead of paying a
+        # defensive whole-bank copy per dispatch like the row above
+        G = 8
+
+        @jax.jit
+        def scan_steps(key, st):
+            def body(c, i):
+                return bank.step(jax.random.fold_in(key, i), c, keys,
+                                 payload, jnp.int32(b)), None
+
+            out, _ = jax.lax.scan(body, st, jnp.arange(G))
+            return out
+
+        us_s = _time(lambda k: scan_steps(k, st),
+                     jax.random.fold_in(key0, 98), iters=iters) / G
+        rows.append((
+            f"bank_{scheme}_fused_scan_K{K}", us_s,
+            {"scheme": scheme, "impl": "fused_scan", "K": K, "cap": cap_n,
+             "bcap": bcap, "batch": b, "keys_touched": nt,
+             "keys_per_s": round(nt * 1e6 / us_s, 1),
+             "items_per_s": round(b * 1e6 / us_s, 1)},
+        ))
+
+    if with_baseline:
+        # naive per-key dispatch: vmap(step_ref) advances ALL K keys
+        dense, counts, nt = _dense_routed(keys, payload, K, bcap)
+        st0 = jax.vmap(lambda _: rtbs.init(proto, cap_n))(jnp.arange(K))
+        kvec = jax.vmap(lambda i: jax.random.fold_in(key0, i))(
+            jnp.arange(K)
+        )
+
+        @jax.jit
+        def vmap_ref(key, st):
+            del key  # per-key streams pre-folded (outside the timed region)
+            return jax.vmap(
+                lambda kk, s, bt, c: rtbs.step_ref(kk, s, bt, c, n=cap_n,
+                                                   lam=LAM)
+            )(kvec, st, dense, counts)
+
+        st = st0
+        for _ in range(3):
+            st = vmap_ref(key0, st)
+        us = _time(lambda k: vmap_ref(k, st), key0, iters=max(3, iters // 3))
+        speed = round(us / fused_us["rtbs"], 2)
+        rows.append((
+            f"bank_rtbs_vmap_ref_K{K}", us,
+            {"scheme": "rtbs", "impl": "vmap_ref", "K": K, "cap": cap_n,
+             "bcap": bcap, "batch": b, "keys_touched": nt,
+             "keys_per_s": round(nt * 1e6 / us, 1),
+             "items_per_s": round(b * 1e6 / us, 1)},
+        ))
+        # attach the criterion to the fused rtbs row of this K
+        for i, (name, u, derived) in enumerate(rows):
+            if name == f"bank_rtbs_fused_K{K}":
+                derived["speedup_vs_ref"] = speed
+                rows[i] = (name, u, derived)
+    return rows
+
+
+def run():
+    smoke = smoke_mode()
+    if smoke:
+        grid = [(256, 64, 16, 8, True)]
+        iters = 3
+    else:
+        # fixed total batch, growing K: the bank's work must stay ~flat
+        # while the naive baseline grows linearly in K (timed at the
+        # acceptance point K=4096; beyond that it only gets worse)
+        grid = [(4096, 256, 64, 32, True), (16384, 256, 64, 32, False),
+                (65536, 256, 64, 32, False)]
+        iters = 10
+    rows = []
+    for K, b, cap_n, bcap, base in grid:
+        rows += bank_rows(K, b, cap_n, bcap, iters=iters,
+                          with_baseline=base)
+    write_bench_json("bank_step", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    from .common import emit
+
+    emit(run())

@@ -19,6 +19,8 @@ REQUIRED_ROW_FIELDS = {
     "manage_loop": ("ticks_per_s",),
     "decay_sweep": ("scenario", "decay", "mean_loss", "post_shift_loss",
                     "es10"),
+    "bank_step": ("scheme", "K", "impl", "keys_touched", "keys_per_s",
+                  "items_per_s"),
 }
 
 
@@ -56,7 +58,7 @@ def check_file(path: pathlib.Path) -> list[str]:
             errors.append(f"{path.name}: adaptive rows lack lam_final")
     # the headline criterion: the fused sampler-step rows must record their
     # speedup against the pre-fused reference
-    if bench in ("sampler_step", "manage_loop"):
+    if bench in ("sampler_step", "manage_loop", "bank_step"):
         fused = [r for r in rows if r.get("impl") == "fused"]
         if fused and not any("speedup_vs_ref" in r for r in fused):
             errors.append(f"{path.name}: fused rows lack speedup_vs_ref")

@@ -100,8 +100,8 @@ def run():
     )
     key = jax.random.key(0)
 
-    tick = jax.jit(make_manage_step(sampler, model,
-                                    retrain_every=retrain_every))
+    tick = make_manage_step(sampler, model,  # jitted, donates off-CPU
+                            retrain_every=retrain_every)
     fused = make_run_loop(sampler, model, retrain_every=retrain_every,
                           superbatch=1)
     fused_sb = make_run_loop(sampler, model, retrain_every=retrain_every,

@@ -12,6 +12,8 @@ report). Prints ``name,us_per_call,derived`` CSV.
             (writes BENCH_sampler_step.json)
   decay  -- static lambda vs polynomial vs adaptive decay on the Sec. 6.2
             drift scenarios (writes BENCH_decay_sweep.json)
+  bank   -- keyed multi-tenant bank step vs naive per-key dispatch at
+            growing K (writes BENCH_bank_step.json)
   roofline -- dry-run roofline table (EXPERIMENTS.md §Roofline)
 
 Select with ``python -m benchmarks.run [names...]`` (default: all).
@@ -25,7 +27,7 @@ import time
 from .common import emit
 
 SUITES = ["fig1", "table1", "fig12", "fig13", "fig789", "manage", "sampler",
-          "decay", "roofline"]
+          "decay", "bank", "roofline"]
 
 
 def main() -> None:
@@ -48,6 +50,8 @@ def main() -> None:
             from . import sampler_step as m
         elif name == "decay":
             from . import decay_sweep as m
+        elif name == "bank":
+            from . import bank_step as m
         elif name == "roofline":
             from . import roofline as m
         else:

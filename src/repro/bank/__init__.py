@@ -1,0 +1,18 @@
+"""repro.bank -- keyed multi-tenant sampler banks (DESIGN.md Sec. 13).
+
+Millions of per-entity time-biased samples advanced in one fused step:
+K stacked reservoirs behind the ``init / step / extract`` protocol
+(:class:`SamplerBank`, built by :func:`make_bank` -- the bank-level twin of
+:func:`repro.core.api.make_sampler`), with key-routed ingestion
+(:mod:`repro.bank.routing`), a banked payload kernel, and a lazy per-key
+pending-decay fast path for the untouched keys. The bank-level
+model-management loops live in :mod:`repro.manage.bank_loop`.
+"""
+from .bank import (  # noqa: F401
+    BankState,
+    SamplerBank,
+    available_bank_schemes,
+    make_bank,
+    register_bank,
+)
+from .routing import Routing, route, subbatches  # noqa: F401

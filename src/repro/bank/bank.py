@@ -1,0 +1,486 @@
+"""Keyed multi-tenant sampler banks (DESIGN.md Sec. 13).
+
+The paper maintains ONE temporally-biased sample per stream; per-user model
+management needs K independent reservoirs decaying concurrently, with K in
+the 10^5..10^6 range -- far past what per-key Python dispatch (or even a
+``vmap`` that advances every key every tick) can serve. A
+:class:`SamplerBank` stores all K reservoirs as one stacked
+structure-of-arrays pytree -- payload leaves [K, cap, ...] plus per-key
+scalar state -- behind the same ``init / step / extract`` closure protocol
+as :class:`repro.core.api.Sampler`, and advances a tick in work proportional
+to the BATCH, not to K:
+
+  * **routing** (:mod:`repro.bank.routing`): one stable O(b log b) argsort
+    buckets the tick's ``(keys, payload)`` arrivals into <= b per-key
+    segments with a static per-key sub-batch capacity ``bcap`` (+ overflow
+    accounting);
+  * **touched keys** are advanced by the scheme's own fused tick composed
+    per key (``vmap`` of :func:`repro.core.rtbs.tick_map` / the T-TBS slot
+    map) and ONE banked payload pass
+    (:func:`repro.kernels.tbs_step.ops.tbs_step_apply_banked`: Pallas
+    ``grid=(T, blocks)`` on TPU, vmap-of-ref oracle elsewhere);
+  * **inactive keys** take the pure-decay fast path: their per-key
+    ``pending`` factor is multiplied by the tick's decay -- one vectorized
+    [K] op, NO payload movement. The deferred downsample is composed into
+    the key's next touch (the tick map runs with the composed factor
+    ``d_eff = pending``) or into its extract view; Theorem 4.1 makes the
+    composition exact in distribution: chaining downsamples C -> C' -> C''
+    has the same inclusion marginals as one C -> C'' downsample, so a key's
+    reservoir in a K-key bank is distributionally identical to a standalone
+    sampler fed only that key's arrivals with wall-clock gaps
+    (``DecaySchedule.tick(dt=...)``) -- re-verified per key in
+    tests/test_bank.py.
+
+Schemes: ``rtbs`` (bounded size + exact time bias per key) and ``ttbs``
+(Alg. 1 per key). ``make_bank(scheme, num_keys=..., ...)`` is the registry
+entry point, the bank-level twin of :func:`repro.core.api.make_sampler`;
+decay takes the same ``lam`` scalar sugar or ``decay=DecaySchedule`` (the
+schedule's bookkeeping is shared across keys -- per-key IRREGULARITY lives
+entirely in ``pending``), and ``step_decayed`` accepts an external factor
+(scalar, or [K] for a vmapped per-key controller). ``step(..., dt=...)``
+consumes per-tick wall-clock gaps through the schedule's dt form.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Mapping
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import latent as lt
+from repro.core import rng, rtbs
+from repro.core.api import SampleView
+from repro.decay import DecaySchedule
+from repro.decay import resolve as _resolve_schedule
+from repro.kernels.tbs_step import ops as tbs_ops
+
+from . import routing
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class BankState:
+    """K stacked per-key reservoirs in structure-of-arrays form.
+
+    ``items`` leaves are [K, cap, ...]. Scalar fields are [K] with
+    scheme-specific meaning -- for ``rtbs``: ``nfull`` = floor(C) of the
+    STORED latent, ``weight`` = stored sample weight C, ``total_weight`` =
+    W as of the key's last touch; for ``ttbs``: ``nfull`` = the buffer
+    count (``weight`` mirrors it as f32). ``pending`` is the per-key
+    composed decay factor accumulated since the key's last touch (1.0 right
+    after a touch); the key's EFFECTIVE totals are
+    ``W_eff = pending * total_weight`` and, for rtbs,
+    ``C_eff = min(weight, W_eff)``. ``overflow`` counts per-key items
+    dropped by the routing ``bcap`` or the buffer capacity. ``dstate`` is
+    the shared decay-schedule bookkeeping (None for constant-rate
+    schedules).
+    """
+
+    items: Any
+    nfull: jax.Array         # [K] int32
+    weight: jax.Array        # [K] float32
+    total_weight: jax.Array  # [K] float32
+    pending: jax.Array       # [K] float32
+    overflow: jax.Array      # [K] int32
+    dstate: Any
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class SamplerBank:
+    """K per-key sampling schemes bound to their hyperparameters.
+
+    The bank-level twin of :class:`repro.core.api.Sampler` (static closure
+    bundle, identity hashing for memoization keys). Closures:
+
+      * ``init(item_proto) -> BankState``
+      * ``step(key, state, keys, payload, bcount, dt=None) -> BankState`` --
+        consume one keyed batch: ``keys`` [b] int32, ``payload`` a pytree
+        with leading dim b, valid prefix ``bcount``; ``dt`` (optional traced
+        scalar) is the wall-clock gap this tick spans.
+      * ``step_decayed(key, state, keys, payload, bcount, d)`` -- the step
+        with the tick's decay factor supplied from outside (scalar or [K]:
+        a per-key closed-loop controller drives exactly this).
+      * ``extract(key, state, key_ids) -> SampleView`` -- realize the listed
+        keys' samples, stacked: item leaves [Q, cap, ...], mask [Q, cap],
+        size [Q]. Pending (deferred) decay is applied IN the view.
+      * ``size(key, state, key_ids) -> [Q] int32`` -- the payload-free fast
+        path; matches ``extract``'s sizes for the same key.
+      * ``base_rate(state, dt=None)`` -- the tick's schedule factor (before
+        any external override), for drivers that need to fill a [K] factor
+        vector around a controlled key subset.
+    """
+
+    scheme: str
+    num_keys: int
+    cap: int
+    bcap: int
+    init: Callable[[Any], BankState]
+    step: Callable[..., BankState]
+    step_decayed: Callable[..., BankState]
+    extract: Callable[[jax.Array, BankState, jax.Array], SampleView]
+    size: Callable[[jax.Array, BankState, jax.Array], jax.Array]
+    base_rate: Callable[..., jax.Array]
+    hyper: Mapping[str, Any]
+
+    def __repr__(self) -> str:
+        hp = ", ".join(f"{k}={v}" for k, v in self.hyper.items())
+        return f"SamplerBank({self.scheme}, K={self.num_keys}, {hp})"
+
+
+_REGISTRY: dict[str, Callable[..., SamplerBank]] = {}
+
+
+def register_bank(name: str):
+    """Decorator: register a ``(num_keys=..., **hyper) -> SamplerBank``
+    builder under ``name`` (mirrors :func:`repro.core.api.register`)."""
+
+    def deco(fn):
+        _REGISTRY[name] = fn
+        return fn
+
+    return deco
+
+
+def available_bank_schemes() -> tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def make_bank(scheme: str, *, num_keys: int, **hyper) -> SamplerBank:
+    """Construct a registered bank scheme, e.g.
+    ``make_bank("rtbs", num_keys=1_000_000, n=64, lam=0.05, bcap=32)``."""
+    try:
+        builder = _REGISTRY[scheme]
+    except KeyError:
+        raise ValueError(
+            f"unknown bank scheme {scheme!r}; available: "
+            f"{available_bank_schemes()}"
+        ) from None
+    if num_keys < 1:
+        raise ValueError(f"num_keys must be >= 1; got {num_keys}")
+    return builder(num_keys=num_keys, **hyper)
+
+
+# ---------------------------------------------------------------------------
+# shared plumbing
+# ---------------------------------------------------------------------------
+def _stacked_items(item_proto: Any, num_keys: int, cap: int) -> Any:
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros((num_keys, cap) + tuple(p.shape), p.dtype),
+        item_proto,
+    )
+
+
+def _init_bank_state(item_proto: Any, num_keys: int, cap: int,
+                     init_dstate) -> BankState:
+    """The zeroed K-key state shared by every bank scheme."""
+    return BankState(
+        items=_stacked_items(item_proto, num_keys, cap),
+        nfull=jnp.zeros((num_keys,), jnp.int32),
+        weight=jnp.zeros((num_keys,), jnp.float32),
+        total_weight=jnp.zeros((num_keys,), jnp.float32),
+        pending=jnp.ones((num_keys,), jnp.float32),
+        overflow=jnp.zeros((num_keys,), jnp.int32),
+        dstate=init_dstate(),
+    )
+
+
+def _make_steps(sched_tick, advance):
+    """(step, step_decayed) from a scheme's ``advance(key, state, keys,
+    payload, bcount, d, new_dstate)``: ``step`` pulls the tick's factor from
+    the shared schedule (optionally over a wall-clock gap ``dt``);
+    ``step_decayed`` applies an external factor (scalar or [K], the
+    controller's entry point) while the schedule bookkeeping still advances
+    -- the same contract as :func:`repro.core.api._thread_schedule`."""
+
+    def step(key, state, keys, payload, bcount, dt=None):
+        d, new_dstate = sched_tick(state.dstate, dt)
+        return advance(key, state, keys, payload, bcount, d, new_dstate)
+
+    def step_decayed(key, state, keys, payload, bcount, d):
+        _, new_dstate = sched_tick(state.dstate, None)
+        return advance(key, state, keys, payload, bcount,
+                       jnp.asarray(d, jnp.float32), new_dstate)
+
+    return step, step_decayed
+
+
+def _check_key_ids(key_ids, num_keys: int) -> jax.Array:
+    """In-range guard for extract/size key lists: traced gathers clamp
+    silently, which would alias a bad id onto another tenant's reservoir --
+    fail eagerly when the ids are concrete instead."""
+    ids = jnp.asarray(key_ids, jnp.int32)
+    try:
+        lo, hi = int(ids.min()), int(ids.max())
+    except jax.errors.ConcretizationTypeError:
+        return jnp.clip(ids, 0, num_keys - 1)  # traced: clamp defensively
+    if lo < 0 or hi >= num_keys:
+        raise ValueError(
+            f"key_ids must lie in [0, {num_keys}); got range [{lo}, {hi}] "
+            "-- sharded banks take LOCAL ids (see shard_keyed_stream)"
+        )
+    return ids
+
+
+def _schedule_fns(sched: DecaySchedule):
+    """(init_dstate, tick, rate): the bank's shared-schedule decay source.
+    Constant-rate schedules carry no state (``dstate`` stays None) so the
+    common exponential bank adds nothing to the pytree."""
+    if sched.static_rate is not None:
+        d0 = jnp.float32(sched.static_rate)
+
+        def tick(dstate, dt):
+            return (
+                d0 if dt is None else sched.factor_dt(jnp.float32(0.0), dt),
+                None,
+            )
+
+        return (lambda: None), tick, (lambda dstate, dt: tick(dstate, dt)[0])
+
+    def tick(dstate, dt):
+        return sched.tick(dstate, dt)
+
+    return sched.init, tick, (lambda dstate, dt: tick(dstate, dt)[0])
+
+
+def _scatter(a: jax.Array, touched: jax.Array, v) -> jax.Array:
+    """Write per-touched-key values back into a [K] column; padded rows
+    (sentinel key == K) drop."""
+    return a.at[touched].set(v, mode="drop")
+
+
+def _fold_keys(key: jax.Array, touched: jax.Array) -> jax.Array:
+    """Per-key RNG streams: fold each touched key id into the tick key --
+    the same fold a standalone per-key driver would apply, which is what
+    makes the bank-vs-vmap-of-single parity bit-exact."""
+    return jax.vmap(lambda k_id: jax.random.fold_in(key, k_id))(touched)
+
+
+def _route_and_gather(keys, payload, bcount, *, num_keys: int, bcap: int):
+    r = routing.route(keys, bcount, num_keys=num_keys, bcap=bcap)
+    sub = routing.subbatches(r, payload, bcap=bcap)
+    idx = jnp.minimum(r.touched, num_keys - 1)  # clipped gather; rows drop
+    return r, sub, idx
+
+
+# ---------------------------------------------------------------------------
+# R-TBS bank
+# ---------------------------------------------------------------------------
+@register_bank("rtbs")
+def _make_rtbs_bank(*, num_keys: int, n: int, lam: float | None = None,
+                    decay: DecaySchedule | None = None,
+                    bcap: int = 64, impl: str | None = None) -> SamplerBank:
+    """K independent R-TBS reservoirs (paper Alg. 2 per key): bounded size n
+    and exact time bias for EVERY key, whatever its arrival pattern.
+
+    ``bcap`` is the static per-key sub-batch capacity (routing overflow
+    beyond it is dropped and counted); ``impl`` routes the banked payload
+    pass (None = auto: Pallas kernel on TPU, vmap-of-ref oracle elsewhere).
+    """
+    sched = _resolve_schedule(lam, decay)
+    cap = n + 1
+    K = num_keys
+    init_dstate, sched_tick, sched_rate = _schedule_fns(sched)
+
+    def init(item_proto: Any) -> BankState:
+        return _init_bank_state(item_proto, K, cap, init_dstate)
+
+    def _advance(key, state: BankState, keys, payload, bcount, d,
+                 new_dstate) -> BankState:
+        # inactive-key fast path: every key's deferred factor composes the
+        # tick's decay -- one [K] multiply, no payload movement
+        pending = state.pending * d
+        r, sub, idx = _route_and_gather(keys, payload, bcount,
+                                       num_keys=K, bcap=bcap)
+        tkeys = _fold_keys(key, r.touched)
+        d_eff = pending[idx]            # composed decay since last touch
+        src, C3, w_new = jax.vmap(
+            lambda kk, k0, C, W, cnt, dd: rtbs.tick_map(
+                kk, k0, C, W, cnt, dd, cap=cap, bcap=bcap, n=n
+            )
+        )(tkeys, state.nfull[idx], state.weight[idx],
+          state.total_weight[idx], r.counts, d_eff)
+        items_t = lt.gather(state.items, idx)      # [T, cap, ...]
+        new_items_t = tbs_ops.tbs_step_apply_banked(items_t, sub, src,
+                                                    impl=impl)
+        items = jax.tree_util.tree_map(
+            lambda a, o: a.at[r.touched].set(o, mode="drop"),
+            state.items, new_items_t,
+        )
+        k3, _ = lt.floor_frac(C3)
+        return BankState(
+            items=items,
+            nfull=_scatter(state.nfull, r.touched, k3),
+            weight=_scatter(state.weight, r.touched, C3),
+            total_weight=_scatter(state.total_weight, r.touched, w_new),
+            pending=_scatter(pending, r.touched, jnp.ones_like(C3)),
+            overflow=state.overflow.at[r.touched].add(r.dropped, mode="drop"),
+            dstate=new_dstate,
+        )
+
+    step, step_decayed = _make_steps(sched_tick, _advance)
+
+    def _effective(state: BankState, idx):
+        w_eff = state.pending[idx] * state.total_weight[idx]
+        return jnp.minimum(state.weight[idx], w_eff)
+
+    def extract(key, state, key_ids):
+        def one(idx):
+            kk = jax.random.fold_in(key, idx)
+            k_ds, k_re = jax.random.split(kk)
+            c_eff = _effective(state, idx)
+            lat = lt.Latent(
+                items=jax.tree_util.tree_map(lambda a: a[idx], state.items),
+                nfull=state.nfull[idx],
+                weight=state.weight[idx],
+            )
+            # settle the deferred decay in-view: ONE composed Thm-4.1
+            # downsample C_stored -> C_eff (identity when untouched decay
+            # hasn't pushed W_eff below the stored C)
+            lat = lt.downsample(k_ds, lat, c_eff, max_deleted=bcap)
+            mask, size = lt.realize(k_re, lat)
+            return lat.items, mask, size
+
+        items, mask, size = jax.vmap(one)(_check_key_ids(key_ids, K))
+        return SampleView(items=items, mask=mask, size=size)
+
+    def size(key, state, key_ids):
+        def one(idx):
+            kk = jax.random.fold_in(key, idx)
+            _, k_re = jax.random.split(kk)
+            k, take, _ = lt.partial_draw(k_re, _effective(state, idx))
+            return k + take.astype(jnp.int32)
+
+        return jax.vmap(one)(_check_key_ids(key_ids, K))
+
+    hyper = {"n": n, "decay": sched, "bcap": bcap}
+    if lam is not None:
+        hyper["lam"] = lam
+    return SamplerBank(
+        scheme="rtbs", num_keys=K, cap=cap, bcap=bcap, init=init, step=step,
+        step_decayed=step_decayed, extract=extract, size=size,
+        base_rate=lambda state, dt=None: sched_rate(state.dstate, dt),
+        hyper=hyper,
+    )
+
+
+# ---------------------------------------------------------------------------
+# T-TBS bank
+# ---------------------------------------------------------------------------
+def _ttbs_key_map(key, count, bcount, p, q, *, cap: int, bcap: int):
+    """One key's T-TBS tick (paper Alg. 1) as a slot map over (buffer,
+    sub-batch) -- the EXACT draw sequence of
+    :func:`repro.core.simple.ttbs_step` (same key splits, same binomials,
+    same PRP), so a bank tick is bit-identical to vmapping the standalone
+    step over the routed sub-batches."""
+    k_ret, k_perm, k_acc, k_pick = jax.random.split(key, 4)
+    m = rng.binomial(k_ret, count, p)
+    perm = rng.prefix_permutation_fast(k_perm, cap, count)
+    k_acc_n = rng.binomial(k_acc, bcount, q)
+    picks = rng.prefix_permutation_fast(k_pick, bcap, bcount)
+    j = jnp.arange(cap, dtype=jnp.int32)
+    in_insert = (j >= m) & (j < m + k_acc_n)
+    src = jnp.where(
+        in_insert, cap + picks[jnp.clip(j - m, 0, bcap - 1)], perm[j]
+    )
+    new_count = jnp.minimum(m + k_acc_n, cap)
+    dropped = jnp.maximum(m + k_acc_n - cap, 0)
+    return src, new_count, dropped
+
+
+@register_bank("ttbs")
+def _make_ttbs_bank(*, num_keys: int, n: int, lam: float | None = None,
+                    decay: DecaySchedule | None = None, batch_size: float,
+                    cap: int | None = None, bcap: int = 64,
+                    impl: str | None = None) -> SamplerBank:
+    """K independent T-TBS buffers (paper Alg. 1 per key).
+
+    Per-key retention composes exactly (Binomial thinning at rate p1 then p2
+    == one thinning at p1*p2), so the lazy ``pending`` factor IS the per-key
+    retention probability at next touch. The acceptance probability is
+    calibrated per TICK from the base (single-gap) rate:
+    ``q_t = clip(n (1 - d_t) / batch_size, 0, 1)`` with ``batch_size`` the
+    key's mean arrivals per touched tick -- same parameterization as
+    :func:`repro.core.api._ttbs_step_d`, including the transient-undershoot
+    clip for time-varying schedules."""
+    sched = _resolve_schedule(lam, decay)
+    cap = 4 * n if cap is None else cap
+    K = num_keys
+    init_dstate, sched_tick, sched_rate = _schedule_fns(sched)
+
+    def init(item_proto: Any) -> BankState:
+        return _init_bank_state(item_proto, K, cap, init_dstate)
+
+    def _advance(key, state, keys, payload, bcount, d, new_dstate):
+        pending = state.pending * d
+        q_full = jnp.clip(
+            n * (1.0 - jnp.broadcast_to(jnp.asarray(d, jnp.float32), (K,)))
+            / jnp.float32(batch_size),
+            0.0, 1.0,
+        )
+        r, sub, idx = _route_and_gather(keys, payload, bcount,
+                                       num_keys=K, bcap=bcap)
+        tkeys = _fold_keys(key, r.touched)
+        p_eff = pending[idx]             # composed retention since last touch
+        src, new_count, dropped_cap = jax.vmap(
+            lambda kk, c, cnt, p, q: _ttbs_key_map(kk, c, cnt, p, q,
+                                                   cap=cap, bcap=bcap)
+        )(tkeys, state.nfull[idx], r.counts, p_eff, q_full[idx])
+        items_t = lt.gather(state.items, idx)
+        new_items_t = tbs_ops.tbs_step_apply_banked(items_t, sub, src,
+                                                    impl=impl)
+        items = jax.tree_util.tree_map(
+            lambda a, o: a.at[r.touched].set(o, mode="drop"),
+            state.items, new_items_t,
+        )
+        w_new = p_eff * state.total_weight[idx] \
+            + r.counts.astype(jnp.float32)
+        return BankState(
+            items=items,
+            nfull=_scatter(state.nfull, r.touched, new_count),
+            weight=_scatter(state.weight, r.touched,
+                            new_count.astype(jnp.float32)),
+            total_weight=_scatter(state.total_weight, r.touched, w_new),
+            pending=_scatter(pending, r.touched, jnp.ones_like(w_new)),
+            overflow=state.overflow.at[r.touched].add(
+                r.dropped + dropped_cap, mode="drop"
+            ),
+            dstate=new_dstate,
+        )
+
+    step, step_decayed = _make_steps(sched_tick, _advance)
+
+    def _keep_mask(key, state, idx):
+        # the T-TBS sample IS the buffer; pending retention (a composed
+        # Binomial thinning, exact per-item Bernoulli at rate ``pending``)
+        # settles in the view
+        kk = jax.random.fold_in(key, idx)
+        keep = jax.random.bernoulli(kk, state.pending[idx], (cap,))
+        valid = jnp.arange(cap) < state.nfull[idx]
+        return valid & (keep | (state.pending[idx] >= 1.0))
+
+    def extract(key, state, key_ids):
+        def one(idx):
+            mask = _keep_mask(key, state, idx)
+            items = jax.tree_util.tree_map(lambda a: a[idx], state.items)
+            return items, mask, mask.sum().astype(jnp.int32)
+
+        items, mask, size = jax.vmap(one)(_check_key_ids(key_ids, K))
+        return SampleView(items=items, mask=mask, size=size)
+
+    def size(key, state, key_ids):
+        def one(idx):
+            return _keep_mask(key, state, idx).sum().astype(jnp.int32)
+
+        return jax.vmap(one)(_check_key_ids(key_ids, K))
+
+    hyper = {"n": n, "decay": sched, "batch_size": batch_size, "cap": cap,
+             "bcap": bcap}
+    if lam is not None:
+        hyper["lam"] = lam
+    return SamplerBank(
+        scheme="ttbs", num_keys=K, cap=cap, bcap=bcap, init=init, step=step,
+        step_decayed=step_decayed, extract=extract, size=size,
+        base_rate=lambda state, dt=None: sched_rate(state.dstate, dt),
+        hyper=hyper,
+    )

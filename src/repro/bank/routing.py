@@ -1,0 +1,118 @@
+"""Key-routing layer of the sampler bank (DESIGN.md Sec. 13).
+
+A tick's arrivals come as ``(keys[b], payload)`` -- one key id per item, in
+arrival order. The bank's batched step needs them as per-key sub-batches:
+which keys arrived this tick, and where each key's items sit. :func:`route`
+computes exactly that with ONE stable argsort over the batch -- O(b log b),
+independent of the number of keys K -- plus O(b) segment bookkeeping and two
+O(K)-free scatters (everything is sized by the batch, never by K):
+
+  * sort items by key (invalid rows past ``bcount`` sort to a ``num_keys``
+    sentinel at the end), so each key's items form a contiguous segment;
+  * segment boundaries give the ``<= b`` distinct touched keys, each with its
+    segment start and length.
+
+Fixed shapes throughout (jit/scan/vmap-safe): the touched-key list is padded
+to length ``b`` with the ``num_keys`` sentinel -- consumers scatter through it
+with ``mode="drop"``. Per-key sub-batches have a STATIC capacity ``bcap``:
+a key receiving more than ``bcap`` items in one tick keeps its FIRST ``bcap``
+(arrival order -- the sort is stable) and the rest are dropped and counted in
+``Routing.dropped``, the bank's visible overflow accounting (the same
+engineering-bound discipline as :class:`repro.core.simple.BufferState`).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class Routing:
+    """One tick's key-bucketing. All arrays are sized by the batch ``b``.
+
+    ``order``: the stable key-sort permutation (gather the payload through it
+    for key-contiguous rows); ``touched``: the distinct arriving keys in
+    ascending order, padded with ``num_keys``; ``ntouched``: how many are
+    real; ``starts``/``counts``: each touched key's segment start in the
+    sorted order and its ACCEPTED length (clipped to the static per-key
+    ``bcap``); ``dropped``: per-touched-key overflow beyond ``bcap``.
+    Rows at or past ``ntouched`` carry the sentinel key and zero counts.
+    """
+
+    order: jax.Array    # [b] int32
+    touched: jax.Array  # [b] int32, ascending distinct keys, num_keys-padded
+    ntouched: jax.Array  # int32 scalar
+    starts: jax.Array   # [b] int32
+    counts: jax.Array   # [b] int32, <= bcap
+    dropped: jax.Array  # [b] int32
+    invalid: jax.Array  # int32 scalar: valid rows with out-of-range key ids
+
+    @property
+    def overflow(self) -> jax.Array:
+        """Total items dropped by the per-key ``bcap`` bound this tick."""
+        return self.dropped.sum()
+
+
+def route(keys: jax.Array, bcount, *, num_keys: int, bcap: int) -> Routing:
+    """Bucket one tick's ``(keys, payload)`` batch into per-key segments.
+
+    ``keys`` is [b] int32; rows at or past ``bcount`` are ignored, and rows
+    whose key id falls outside [0, num_keys) are DISCARDED and counted in
+    ``Routing.invalid`` -- never clipped onto a real tenant's reservoir
+    (the cross-tenant aliasing a traced clip would silently cause; sharded
+    banks take LOCAL ids, see manage.shard_keyed_stream).
+    ``num_keys``/``bcap`` are static. See the module docstring for the
+    contract and cost model.
+    """
+    b = keys.shape[0]
+    bcount = jnp.asarray(bcount, jnp.int32)
+    keys = keys.astype(jnp.int32)
+    in_range = (keys >= 0) & (keys < num_keys)
+    valid = (jnp.arange(b, dtype=jnp.int32) < bcount)
+    invalid = (valid & ~in_range).sum().astype(jnp.int32)
+    valid = valid & in_range
+    mk = jnp.where(valid, keys, jnp.int32(num_keys))
+    order = jnp.argsort(mk).astype(jnp.int32)        # stable: arrival order
+    sk = mk[order]                                   # key-contiguous
+    prev = jnp.concatenate([jnp.full((1,), -1, sk.dtype), sk[:-1]])
+    is_start = (sk != prev) & (sk < num_keys)
+    seg = jnp.cumsum(is_start.astype(jnp.int32)) - 1  # segment id per row
+    nt = is_start.sum().astype(jnp.int32)
+
+    pos = jnp.arange(b, dtype=jnp.int32)
+    # scatter per-segment facts through the segment id; rows of invalid items
+    # (sk == num_keys) route to index b and drop
+    live = sk < num_keys
+    at = jnp.where(is_start, seg, b)
+    touched = jnp.full((b,), num_keys, jnp.int32).at[at].set(sk, mode="drop")
+    starts = jnp.zeros((b,), jnp.int32).at[at].set(pos, mode="drop")
+    raw = jnp.zeros((b,), jnp.int32).at[jnp.where(live, seg, b)].add(
+        1, mode="drop"
+    )
+    counts = jnp.minimum(raw, bcap)
+    return Routing(order=order, touched=touched, ntouched=nt, starts=starts,
+                   counts=counts, dropped=raw - counts, invalid=invalid)
+
+
+def subbatches(r: Routing, payload, *, bcap: int):
+    """Gather each touched key's sub-batch from the tick's payload: leaves
+    [b, ...] -> [b(touched rows), bcap, ...].
+
+    Row t holds touched key t's items in its first ``r.counts[t]`` slots
+    (in arrival order); slots beyond the count are neighbouring keys'
+    payload -- garbage the step masks via its ``bcount`` operand, exactly
+    like the zero padding of a materialized stream. Rows past ``ntouched``
+    are entirely garbage (their writes are dropped downstream)."""
+    b = r.order.shape[0]
+    idx = jnp.clip(
+        r.starts[:, None] + jnp.arange(bcap, dtype=jnp.int32)[None, :],
+        0, b - 1,
+    )
+
+    def one(leaf):
+        return jnp.take(jnp.take(leaf, r.order, axis=0), idx, axis=0)
+
+    return jax.tree_util.tree_map(one, payload)

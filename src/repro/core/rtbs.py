@@ -72,7 +72,8 @@ def init(item_proto: Any, n: int) -> RTBSState:
 # ---------------------------------------------------------------------------
 # the fused step: one composed slot map, one payload pass (DESIGN.md Sec. 11)
 # ---------------------------------------------------------------------------
-def _tick_map(key, state: RTBSState, bcount, bcap: int, *, n: int, decay):
+def tick_map(key, nfull, weight, total_weight, bcount, decay, *,
+             cap: int, bcap: int, n: int):
     """Compose the whole tick's buffer rewrite into ONE slot map.
 
     Returns ``(src[cap] int32, new_sample_weight, w_new)`` where ``src``
@@ -81,13 +82,18 @@ def _tick_map(key, state: RTBSState, bcount, bcap: int, *, n: int, decay):
     applies it in a single two-source payload pass; all the work here is
     O(cap + bcap) integer/scalar ops and at most two swap-or-not PRP
     evaluations -- no argsort, no intermediate payload buffers.
+
+    Scalar-operand form (``nfull``/``weight``/``total_weight``/``bcount``/
+    ``decay`` traced, ``cap``/``bcap``/``n`` static) so that
+    :mod:`repro.bank` can ``vmap`` it over the touched keys of a keyed batch
+    with per-key composed decay factors (DESIGN.md Sec. 13);
+    :func:`step` feeds it a single :class:`RTBSState`.
     """
-    cap = state.lat.cap
     bf = jnp.asarray(bcount, jnp.float32)
     bcnt = jnp.asarray(bcount, jnp.int32)
-    w_prev = state.total_weight
-    C = state.lat.weight
-    k0 = state.lat.nfull
+    w_prev = total_weight
+    C = weight
+    k0 = nfull
     was_unsat = w_prev < n
     w_dec = decay * w_prev
     w_new = w_dec + bf                # both Alg. 2 branches decay then add B
@@ -165,6 +171,14 @@ def _tick_map(key, state: RTBSState, bcount, bcap: int, *, n: int, decay):
 
     src, C3 = jax.lax.cond(still_sat, replace_path, insert_path)
     return src, C3, w_new
+
+
+def _tick_map(key, state: RTBSState, bcount, bcap: int, *, n: int, decay):
+    """:func:`tick_map` on an :class:`RTBSState` (the fused step's view)."""
+    return tick_map(
+        key, state.lat.nfull, state.lat.weight, state.total_weight, bcount,
+        decay, cap=state.lat.cap, bcap=bcap, n=n,
+    )
 
 
 def _resolve_decay(lam, decay) -> jax.Array:

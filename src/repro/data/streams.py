@@ -125,6 +125,62 @@ class UsenetLikeStream:
 
 
 @dataclasses.dataclass
+class KeyedStream:
+    """Multi-tenant wrapper: stamp any base stream's items with entity keys
+    (the :mod:`repro.bank` workload; DESIGN.md Sec. 13).
+
+    Each item gets a key drawn from a Zipf-like popularity law over
+    ``num_keys`` entities, ``P(k) ∝ (k + 1)^-alpha`` -- key 0 is the most
+    popular, so a bank driver's "top-Q" training subset is simply
+    ``range(Q)``. Every key drifts on its OWN phase: key k's mode flips
+    every ``flip_every`` ticks with a per-key random offset, so at any tick
+    the population is a mixture of both regimes (no global mode argument
+    can represent that -- ``batch`` ignores ``mode`` and derives each
+    item's regime from its key).  Per-key arrival streams are therefore
+    irregular by construction (a rare key skips most ticks), which is what
+    exercises the bank's lazy pending decay and the schedules' ``dt`` form.
+
+    ``batch(t, size) -> (keys [size] i32, *payload)`` where payload is the
+    base stream's tuple (or single array), rows drawn from the item's
+    per-key regime. Deterministic in (seed, t), like every generator here.
+    """
+
+    base: object
+    num_keys: int
+    alpha: float = 1.1
+    seed: int = 0
+    flip_every: int = 50
+
+    def __post_init__(self):
+        w = (1.0 + np.arange(self.num_keys)) ** -float(self.alpha)
+        self.key_probs = w / w.sum()
+        rs = np.random.RandomState((self.seed, 9973))
+        self.phases = rs.randint(0, max(self.flip_every, 1),
+                                 size=self.num_keys)
+
+    def key_mode(self, k: np.ndarray, t: int) -> np.ndarray:
+        """Key k's regime at tick t: phase-shifted periodic flip."""
+        if self.flip_every <= 0:
+            return np.zeros_like(np.asarray(k))
+        return ((t + self.phases[k]) // self.flip_every) % 2
+
+    def batch(self, t: int, size: int, mode: int = 0):
+        del mode  # per-item regime comes from the item's key, see docstring
+        rs = np.random.RandomState((self.seed, 60013, t))
+        keys = rs.choice(self.num_keys, size=size, p=self.key_probs)
+        modes = self.key_mode(keys, t)
+        raw0 = self.base.batch(t, size, 0)
+        raw1 = self.base.batch(t, size, 1)
+        if not isinstance(raw0, tuple):
+            raw0, raw1 = (raw0,), (raw1,)
+        sel = [
+            np.where(modes.reshape((-1,) + (1,) * (a.ndim - 1)) > 0, b, a)
+            for a, b in zip(raw0, raw1)
+        ]
+        return (keys.astype(np.int32), *sel)
+
+
+@dataclasses.dataclass
 class TokenDriftStream:
     """LM stream with concept drift: two synthetic 'languages' = different
     bigram transition matrices over one vocabulary; items are fixed-length

@@ -76,6 +76,20 @@ class DecaySchedule:
     entirely (the exponential fast path).  ``eq=False`` keeps identity
     hashing so schedules work inside memoization keys exactly like Samplers
     and ModelAdapters.
+
+    Irregular arrivals (per-tick ``dt``): ``tick(dstate, dt=...)`` consumes a
+    wall-clock gap instead of one unit tick.  ``rate_dt(dstate, dt)``, when a
+    schedule defines it, is the EXACT composed factor over the gap --
+    exponential (``e^{-lam dt}``, identical to ``d^dt``) and polynomial (the
+    telescoping ratio closes over any real gap) are exact; schedules without
+    it fall back to ``rate(dstate) ** dt``, i.e. the current rate held flat
+    across the gap (exact for any constant-rate schedule, a documented
+    approximation for piecewise/from_callable, whose rate tables are indexed
+    by tick count, not wall-clock).  ``step_dt`` advances the bookkeeping by
+    the gap EXACTLY: counter schedules carry elapsed time as f32, so
+    repeated sub-unit gaps accumulate instead of rounding away (integer
+    ticks stay integer-exact below 2^24; tick-table lookups floor the
+    counter).
     """
 
     name: str
@@ -84,10 +98,33 @@ class DecaySchedule:
     step: Callable[[Any], Any]
     hyper: Mapping[str, Any]
     static_rate: float | None = None
+    rate_dt: Callable[[Any, jax.Array], jax.Array] | None = None
+    step_dt: Callable[[Any, jax.Array], Any] | None = None
 
-    def tick(self, dstate) -> tuple[jax.Array, Any]:
-        """Convenience: ``(d_t, advanced state)`` in one call."""
-        return self.rate(dstate), self.step(dstate)
+    def factor_dt(self, dstate, dt) -> jax.Array:
+        """The composed decay factor over a gap of ``dt`` time units from the
+        current state (see class docstring for exactness per schedule)."""
+        dt = jnp.asarray(dt, jnp.float32)
+        if self.rate_dt is not None:
+            return jnp.clip(
+                jnp.asarray(self.rate_dt(dstate, dt), jnp.float32), 0.0, 1.0
+            )
+        return self.rate(dstate) ** dt
+
+    def advance_dt(self, dstate, dt) -> Any:
+        """Advance the bookkeeping state by a gap of ``dt`` time units
+        (one plain ``step`` when the schedule has no native dt advance)."""
+        if self.step_dt is not None:
+            return self.step_dt(dstate, jnp.asarray(dt, jnp.float32))
+        return self.step(dstate)
+
+    def tick(self, dstate, dt=None) -> tuple[jax.Array, Any]:
+        """Convenience: ``(d_t, advanced state)`` in one call. With ``dt``
+        the factor covers the whole gap (ROADMAP decay follow-up (b):
+        wall-clock gaps, not just tick indices)."""
+        if dt is None:
+            return self.rate(dstate), self.step(dstate)
+        return self.factor_dt(dstate, dt), self.advance_dt(dstate, dt)
 
     def __repr__(self) -> str:
         hp = ", ".join(f"{k}={v}" for k, v in self.hyper.items())
@@ -96,17 +133,23 @@ class DecaySchedule:
 
 def _counter_schedule(name: str, rate_of_t: Callable[[jax.Array], jax.Array],
                       hyper: Mapping[str, Any],
-                      static_rate: float | None = None) -> DecaySchedule:
-    """Schedules whose only state is the tick counter t (int32, starts 0)."""
+                      static_rate: float | None = None,
+                      rate_dt: Callable[[Any, jax.Array], jax.Array] | None = None,
+                      ) -> DecaySchedule:
+    """Schedules whose only state is the elapsed-time counter t (f32,
+    starts 0; advances by 1 per unit tick, by ``dt`` exactly under
+    irregular arrivals -- f32 is integer-exact below 2^24 ticks)."""
     return DecaySchedule(
         name=name,
-        init=lambda: jnp.int32(0),
+        init=lambda: jnp.float32(0.0),
         rate=lambda t: jnp.clip(
             jnp.asarray(rate_of_t(t), jnp.float32), 0.0, 1.0
         ),
-        step=lambda t: t + 1,
+        step=lambda t: t + 1.0,
         hyper=hyper,
         static_rate=static_rate,
+        rate_dt=rate_dt,
+        step_dt=lambda t, dt: t + dt,
     )
 
 
@@ -123,6 +166,8 @@ def exponential(lam: float) -> DecaySchedule:
     return _counter_schedule(
         "exponential", lambda t: jnp.float32(d), {"lam": float(lam)},
         static_rate=d,
+        # exact for any real gap: e^{-lam dt} (== d^dt, age-invariant)
+        rate_dt=lambda t, dt: jnp.exp(jnp.float32(-lam) * dt),
     )
 
 
@@ -146,8 +191,19 @@ def polynomial(beta: float, *, t0: float = 1.0) -> DecaySchedule:
         tf = jnp.asarray(t, jnp.float32)
         return (jnp.maximum(tf - 1.0 + t0, 0.0) / (tf + t0)) ** beta
 
+    def rate_dt(t, dt):
+        # the telescoping ratio closes over any real gap: the factor from
+        # counter t covering dt time units is ((t-1+t0)/(t-1+dt+t0))^beta,
+        # exactly prod of the dt unit factors when dt is integral
+        tf = jnp.asarray(t, jnp.float32)
+        return (
+            jnp.maximum(tf - 1.0 + t0, 0.0)
+            / jnp.maximum(tf - 1.0 + dt + t0, 1e-30)
+        ) ** beta
+
     return _counter_schedule(
-        "polynomial", rate, {"beta": float(beta), "t0": float(t0)}
+        "polynomial", rate, {"beta": float(beta), "t0": float(t0)},
+        rate_dt=rate_dt,
     )
 
 
@@ -181,8 +237,11 @@ def piecewise(boundaries: tuple[int, ...], lams: tuple[float, ...]) -> DecaySche
 
 def from_callable(fn: Callable[[jax.Array], jax.Array], *,
                   name: str = "callable", **hyper) -> DecaySchedule:
-    """Arbitrary decay: ``fn(t) -> d_t`` with ``t`` the (traced) int32 tick
-    index.  ``fn`` must be jit-traceable and return a factor in [0, 1]
+    """Arbitrary decay: ``fn(t) -> d_t`` with ``t`` the (traced) f32
+    ELAPSED TIME -- integer-valued under plain unit ticks, fractional when
+    driven with wall-clock ``dt`` gaps; cast with
+    ``t.astype(jnp.int32)`` for tick-table lookups (as :func:`piecewise`
+    does).  ``fn`` must be jit-traceable and return a factor in [0, 1]
     (clipped defensively); for a decay *rate* function ``lam(t)`` pass
     ``lambda t: jnp.exp(-lam(t))``."""
     return _counter_schedule(name, fn, dict(hyper))

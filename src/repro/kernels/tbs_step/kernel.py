@@ -37,6 +37,62 @@ def _kernel(src_ref, items_ref, batch_ref, out_ref, *, cap, bcap):
     )
 
 
+def _kernel_banked(src_ref, items_ref, batch_ref, out_ref, *, cap, bcap):
+    # the banked body is the single-reservoir kernel with a leading
+    # size-1 bank block: each (key, block) grid step rewrites one output
+    # block of one touched key's reservoir from that key's two VMEM-resident
+    # sources
+    block = out_ref.shape[1]
+    src = src_ref[...][0, :, 0]                    # [block] int32
+    items = items_ref[...][0]                      # [cap, D]
+    batch = batch_ref[...][0]                      # [bcap, D]
+    jj = jax.lax.broadcasted_iota(jnp.int32, (block, cap), 1)
+    sel_i = ((jj == src[:, None]) & (src[:, None] < cap)).astype(items.dtype)
+    kk = jax.lax.broadcasted_iota(jnp.int32, (block, bcap), 1)
+    sel_b = ((kk == (src[:, None] - cap)) & (src[:, None] >= cap)).astype(
+        batch.dtype
+    )
+    out_ref[0, ...] = jax.lax.dot_general(
+        sel_i, items, (((1,), (0,)), ((), ())),
+        preferred_element_type=out_ref.dtype,
+    ) + jax.lax.dot_general(
+        sel_b, batch, (((1,), (0,)), ((), ())),
+        preferred_element_type=out_ref.dtype,
+    )
+
+
+def apply_banked(items, batch, src, *, block=128, interpret=False):
+    """The bank grid dimension (DESIGN.md Sec. 13): items [T, cap, D];
+    batch [T, bcap, D]; src [T, capP] int32 (capP >= cap a multiple of
+    ``block``, entries in [0, cap + bcap)) -> out [T, capP, D] with
+    out[t, i] = items[t, src[t, i]] if src[t, i] < cap else
+    batch[t, src[t, i] - cap]. One launch advances every touched key:
+    grid = (T, capP // block) with the leading axis selecting the key row.
+    Parity oracle: ``jax.vmap`` of :func:`repro.kernels.tbs_step.ref.apply_ref`
+    (see ref.apply_banked_ref)."""
+    T, cap, D = items.shape
+    bcap = batch.shape[1]
+    capP = src.shape[1]
+    b = min(block, capP)
+    assert capP % b == 0 and capP >= cap, (capP, cap, b)
+    nb = capP // b
+    src3 = src.astype(jnp.int32).reshape(T, capP, 1)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel_banked, cap=cap, bcap=bcap),
+        grid=(T, nb),
+        in_specs=[
+            pl.BlockSpec((1, b, 1), lambda t, bi: (t, bi, 0)),
+            pl.BlockSpec((1, cap, D), lambda t, bi: (t, 0, 0)),
+            pl.BlockSpec((1, bcap, D), lambda t, bi: (t, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, b, D), lambda t, bi: (t, bi, 0)),
+        out_shape=jax.ShapeDtypeStruct((T, capP, D), items.dtype),
+        interpret=interpret,
+    )(src3, items, batch)
+    return out
+
+
 def apply(items, batch, src, *, block=128, interpret=False):
     """items [cap, D]; batch [bcap, D]; src [capP] int32 (capP >= cap a
     multiple of ``block``; entries in [0, cap + bcap), rows past cap are

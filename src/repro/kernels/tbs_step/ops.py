@@ -46,6 +46,45 @@ def _apply2d(items, batch, src, *, block, impl):
     return out[:cap]
 
 
+@functools.partial(jax.jit, static_argnames=("block", "impl"))
+def _apply3d(items, batch, src, *, block, impl):
+    if impl == "ref":
+        return ref.apply_banked_ref(items, batch, src[:, : items.shape[1]])
+    T, cap, D = items.shape
+    capP = src.shape[1]
+    pad = -capP % min(block, max(capP, 1))
+    if pad:
+        src = jnp.concatenate(
+            [src, jnp.zeros((T, pad), jnp.int32)], axis=1
+        )
+    out = kernel.apply_banked(
+        items, batch, src, block=block, interpret=(impl == "interpret")
+    )
+    return out[:, :cap]
+
+
+def tbs_step_apply_banked(items, batch_items, src, *, block=128, impl=None):
+    """Banked :func:`tbs_step_apply` (DESIGN.md Sec. 13): apply T independent
+    tick slot-maps ``src[T, cap]`` to T stacked reservoirs in ONE launch.
+    ``items`` leaves are [T, cap, ...] (the touched keys' reservoirs, gathered
+    from the bank), ``batch_items`` leaves [T, bcap, ...] (their routed
+    sub-batches). Same dtype widening and impl routing as the single-reservoir
+    wrapper; ``impl="ref"`` is the vmap-of-ref parity oracle."""
+    if impl is None:
+        impl = _auto_impl()
+
+    def one(leaf, bleaf):
+        T, cap = leaf.shape[:2]
+        dt = leaf.dtype
+        wide = dt if jnp.issubdtype(dt, jnp.floating) else jnp.int32
+        flat = leaf.reshape(T, cap, -1).astype(wide)
+        bflat = bleaf.reshape(T, bleaf.shape[1], -1).astype(wide)
+        out = _apply3d(flat, bflat, src, block=block, impl=impl)
+        return out.reshape(leaf.shape).astype(dt)
+
+    return jax.tree_util.tree_map(one, items, batch_items)
+
+
 def tbs_step_apply(items, batch_items, src, *, block=128, impl=None):
     """Apply the composed tick slot-map ``src[cap]`` (values in
     [0, cap + bcap): reservoir row, or ``cap +`` batch row) to an item pytree:

@@ -1,6 +1,7 @@
 """Pure-jnp oracle for the fused TBS-step payload pass (two-source gather)."""
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 
@@ -14,3 +15,10 @@ def apply_ref(items, batch, src):
     gi = jnp.take(items, jnp.clip(src, 0, cap - 1), axis=0)
     gb = jnp.take(batch, jnp.clip(src - cap, 0, bcap - 1), axis=0)
     return jnp.where(from_batch[:, None], gb, gi)
+
+
+def apply_banked_ref(items, batch, src):
+    """vmap-of-:func:`apply_ref` over a leading bank axis -- THE parity
+    oracle for the banked kernel's grid dimension: items [T, cap, D];
+    batch [T, bcap, D]; src [T, cap] -> out [T, cap, D]."""
+    return jax.vmap(apply_ref)(items, batch, src)

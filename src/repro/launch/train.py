@@ -27,9 +27,17 @@ Decay (DESIGN.md Sec. 12): ``--decay exp`` (default; rate ``--lam``) or
 the closed-loop controller (lambda driven by the prequential loss between
 ``--lam-min`` and ``--lam-max``, starting at ``--lam``).
 
+Multi-tenant mode (DESIGN.md Sec. 13): ``--num-keys K`` swaps the single
+sampler for a :class:`repro.bank.SamplerBank` -- K per-key time-biased
+samples over a Zipf-keyed token stream with per-key drift phases, advanced
+by the bank's fused key-routed step; the LM retrains on the pooled extract
+of the ``--train-keys`` most popular keys (rtbs/ttbs only).
+
 Examples:
   PYTHONPATH=src python -m repro.launch.train --arch stablelm_12b \
       --preset smoke --ticks 30 --retrain-every 5 --scheme rtbs
+  PYTHONPATH=src python -m repro.launch.train --arch mamba2_370m \
+      --preset smoke --ticks 20 --scheme rtbs --num-keys 4096 --train-keys 8
   PYTHONPATH=src python -m repro.launch.train --arch mamba2_370m \
       --preset smoke --ticks 12 --retrain-every 4 --scheme drtbs --shards 8
   PYTHONPATH=src python -m repro.launch.train --arch mamba2_370m \
@@ -47,11 +55,13 @@ import jax.numpy as jnp
 
 from repro import config as C
 from repro import decay as dk
+from repro.bank import make_bank
 from repro.checkpoint import AsyncCheckpointer, latest_step, restore_checkpoint
 from repro.core.api import available_schemes, make_sampler
-from repro.data.streams import TokenDriftStream, mode_schedule
+from repro.data.streams import KeyedStream, TokenDriftStream, mode_schedule
 from repro.manage import (
     init_sharded_state,
+    make_bank_run_loop,
     make_sgd_adapter,
     make_sharded_resume_loop,
     make_sharded_run_loop,
@@ -234,6 +244,74 @@ def run_sharded(args, adapter, stream, sampler, controller=None):
     return log
 
 
+def run_bank(args, adapter, cfg):
+    """Multi-tenant mode (``--num-keys``, DESIGN.md Sec. 13): one
+    :class:`repro.bank.SamplerBank` maintains a per-key time-biased sample
+    for every entity; the shared LM retrains on the pooled extract of the
+    ``--train-keys`` most popular keys. The whole run is one fused
+    :func:`repro.manage.make_bank_run_loop` scan over a Zipf-keyed token
+    stream with per-key drift phases."""
+    if args.ckpt_dir or args.resume:
+        raise SystemExit(
+            "--num-keys has no checkpoint/resume path yet (ROADMAP bank "
+            "follow-up (c)); drop --ckpt-dir/--resume for bank runs"
+        )
+    K, Q = args.num_keys, min(args.train_keys, args.num_keys)
+    stream = KeyedStream(
+        base=TokenDriftStream(seed=args.seed, vocab=cfg.vocab_size,
+                              seq_len=args.seq_len),
+        num_keys=K, seed=args.seed,
+        flip_every=0 if args.drift == "none" else 5 * args.retrain_every,
+    )
+    batches, bcounts = materialize_stream(
+        stream, args.ticks, batch_size=args.batch_per_tick,
+        fields=("key", "tokens"),
+    )
+    bcap = args.bank_bcap or args.batch_per_tick
+    dkw = {"lam": args.lam}
+    sched, controller = build_decay(args)
+    if controller is not None:
+        raise SystemExit("--adaptive drives per-key farms "
+                         "(manage.make_bank_run_loop(per_key=True)); the "
+                         "shared-model --num-keys driver runs the bank's "
+                         "own schedule")
+    if sched is not None:
+        dkw = {"decay": sched}
+    if args.scheme == "rtbs":
+        bank = make_bank("rtbs", num_keys=K, n=args.reservoir, bcap=bcap,
+                         **dkw)
+    elif args.scheme == "ttbs":
+        # per-key mean arrivals per touched tick ~ 1 sub-batch row; the
+        # popular keys see ~ b * P(0) of the tick
+        bank = make_bank("ttbs", num_keys=K, n=args.reservoir,
+                         batch_size=max(1.0, args.batch_per_tick / K),
+                         bcap=bcap, **dkw)
+    else:
+        raise SystemExit(
+            f"--num-keys supports the local time-biased schemes rtbs/ttbs; "
+            f"got --scheme {args.scheme}"
+        )
+    run = make_bank_run_loop(bank, adapter, retrain_every=args.retrain_every,
+                             train_keys=range(Q),
+                             superbatch=args.superbatch)
+    print(f"[train] bank {args.scheme} loop: K={K} keys, top-{Q} trained, "
+          f"{args.ticks} ticks, one fused program", flush=True)
+    state, _, trace = run(jax.random.key(args.seed), batches, bcounts)
+    metric = jax.device_get(trace["metric"])
+    sizes = jax.device_get(trace["size"])
+    log = []
+    for t in range(args.ticks):
+        row = {"tick": t, "eval_loss": float(metric[t]),
+               "train_key_sizes": [int(s) for s in sizes[t]]}
+        log.append(row)
+        print(f"[train] tick={t:4d} eval={float(metric[t]):7.4f} "
+              f"|S|(top-{Q})={sizes[t].tolist()}", flush=True)
+    ov = int(jax.device_get(state.overflow).sum())
+    print(f"[train] bank done: routed-overflow={ov} items "
+          f"(per-key bcap={bcap})", flush=True)
+    return log
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="stablelm_12b")
@@ -243,6 +321,16 @@ def main(argv=None):
                              "drtbs", "dttbs"])
     ap.add_argument("--shards", type=int, default=8,
                     help="data-axis width for the distributed schemes")
+    ap.add_argument("--num-keys", type=int, default=0,
+                    help="multi-tenant mode: maintain one per-key "
+                         "time-biased sample for this many entities "
+                         "(repro.bank; rtbs/ttbs only, DESIGN.md Sec. 13)")
+    ap.add_argument("--train-keys", type=int, default=8,
+                    help="bank mode: retrain on / log the pooled sample of "
+                         "this many most-popular keys")
+    ap.add_argument("--bank-bcap", type=int, default=None,
+                    help="bank mode: static per-key sub-batch capacity "
+                         "(default: the whole tick batch, no routing drops)")
     ap.add_argument("--ticks", type=int, default=30)
     ap.add_argument("--batch-per-tick", type=int, default=32)
     ap.add_argument("--reservoir", type=int, default=256)
@@ -317,6 +405,9 @@ def main(argv=None):
         retrain_steps=args.retrain_steps,
         name=args.arch,
     )
+    if args.num_keys:
+        return run_bank(args, adapter, cfg)
+
     sched, controller = build_decay(args)
     sampler = build_sampler(args.scheme, n=args.reservoir, lam=args.lam,
                             batch_per_tick=args.batch_per_tick,

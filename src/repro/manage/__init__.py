@@ -4,8 +4,17 @@ Wires :mod:`repro.data.streams` -> a :class:`repro.core.api.Sampler` ->
 periodic retraining -> prequential eval in one compiled ``lax.scan``
 (:mod:`repro.manage.loop`), with model adapters for the paper's applications
 and for gradient-trained zoo models (:mod:`repro.manage.models`).
-See DESIGN.md Sec. 8 for the architecture.
+See DESIGN.md Sec. 8 for the architecture. Keyed multi-tenant banks run the
+same loop over K per-key samples (:mod:`repro.manage.bank_loop`,
+DESIGN.md Sec. 13).
 """
+from .bank_loop import (  # noqa: F401
+    keyed_item_proto,
+    make_bank_run_loop,
+    make_sharded_bank_loop,
+    pooled_view,
+    shard_keyed_stream,
+)
 from .loop import (  # noqa: F401
     init_sharded_state,
     make_manage_step,

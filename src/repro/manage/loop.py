@@ -289,13 +289,10 @@ def _pair_carry(tick: Callable, fast: Callable) -> tuple[Callable, Callable]:
     return tick_c, fast_c
 
 
-def make_manage_step(sampler: Sampler, model: ModelAdapter, *,
-                     retrain_every: int = 1) -> Callable:
-    """One tick of the loop: ``(key, t, state, params, batch, bcount) ->
-    (state, params, metrics)``. Composable: this exact function is what
-    :func:`make_run_loop` scans, so driving it tick-by-tick (checkpointing,
-    serving, human-in-the-loop) stays bit-identical to the fused run."""
-    _check_local(sampler)
+def _make_local_tick(sampler: Sampler, model: ModelAdapter,
+                     retrain_every: int) -> Callable:
+    """The raw (unjitted) local tick body shared by :func:`make_run_loop`'s
+    scan and the jitted per-tick driver :func:`make_manage_step`."""
 
     def step(key, t, state, params, batch_items, bcount):
         k_step, k_extract, k_fit = tick_keys(key, t)
@@ -316,6 +313,35 @@ def make_manage_step(sampler: Sampler, model: ModelAdapter, *,
         return state, params, metrics
 
     return step
+
+
+def make_manage_step(sampler: Sampler, model: ModelAdapter, *,
+                     retrain_every: int = 1) -> Callable:
+    """One tick of the loop as its own jitted dispatch: ``(key, t, state,
+    params, batch, bcount) -> (state, params, metrics)``. Composable: the
+    same tick body is what :func:`make_run_loop` scans, so driving it
+    tick-by-tick (checkpointing, serving, human-in-the-loop) stays
+    bit-identical to the fused run.
+
+    The sampler ``state`` (arg 2) is DONATED on backends that support
+    donation (not CPU), matching the sharded per-tick driver: the driver
+    round-trips the reservoir every dispatch, so donation lets XLA reuse its
+    buffers in place instead of double-buffering -- do not reuse a state
+    after passing it in. The reservoir stays device-resident across ticks:
+    nothing in the tick forces a host copy (asserted under a
+    device-to-host transfer guard in tests/test_api.py)."""
+    _check_local(sampler)
+
+    def build():
+        donate = () if jax.default_backend() == "cpu" else (2,)
+        return jax.jit(_make_local_tick(sampler, model, retrain_every),
+                       donate_argnums=donate)
+
+    return _memoized(
+        "manage_step",
+        (sampler, model, retrain_every, jax.default_backend()),
+        build,
+    )
 
 
 _BUILD_CACHE: OrderedDict[tuple, Callable] = OrderedDict()
@@ -383,13 +409,13 @@ def make_run_loop(sampler: Sampler, model: ModelAdapter, *,
 def _build_run_loop(sampler: Sampler, model: ModelAdapter,
                     retrain_every: int, superbatch: int | None,
                     controller=None) -> Callable:
+    _check_local(sampler)
     if controller is None:
         tick, fast = _pair_carry(
-            make_manage_step(sampler, model, retrain_every=retrain_every),
+            _make_local_tick(sampler, model, retrain_every),
             _make_fast_tick(sampler, model),
         )
     else:
-        _check_local(sampler)
         _check_controllable(sampler)
         tick, fast = _make_controlled_ticks(sampler, model, controller,
                                             retrain_every)
@@ -644,7 +670,8 @@ def _sharded_loop_body(sampler: Sampler, model: ModelAdapter,
 
 
 def make_sharded_manage_step(sampler: Sampler, model: ModelAdapter, mesh, *,
-                             retrain_every: int = 1) -> Callable:
+                             retrain_every: int = 1,
+                             controller=None) -> Callable:
     """ONE tick of the sharded loop as its own dispatch: ``(key, t, state,
     params, batch_t, bcount_t) -> (state, params, metrics)``.
 
@@ -656,35 +683,67 @@ def make_sharded_manage_step(sampler: Sampler, model: ModelAdapter, mesh, *,
     point: per-tick dispatch + the snapshot all_gather every tick, which the
     fused scan amortizes away (see benchmarks/manage_loop.py).
 
+    ``controller`` (a :class:`repro.decay.AdaptiveDecay`) threads the
+    closed-loop decay controller exactly as in
+    :func:`make_sharded_run_loop` -- the signature becomes ``(key, t, state,
+    params, cstate, batch_t, bcount_t) -> (state, params, cstate, metrics)``
+    with the replicated controller state round-tripped alongside, and the
+    per-tick arithmetic (rate -> step_decayed -> observe, adjustment gated
+    on retrain ticks) is the SAME controlled tick the fused loop scans, so
+    fused and per-tick controlled runs stay bit-identical (asserted in
+    tests/test_sharded_loop.py).
+
     The ``state_g`` snapshot is DONATED on backends that support donation
     (not CPU): the driver round-trips it every dispatch, so donation lets
     XLA reuse the reservoir buffers in place instead of double-buffering
     them -- do not reuse a snapshot after passing it in.
     """
     _check_sharded(sampler)
+    if controller is not None:
+        _check_controllable(sampler)
 
     def build():
         from jax.sharding import PartitionSpec as P
 
         axis = distributed.AXIS
-        tick = _make_sharded_tick(sampler, model, retrain_every)
+        donate = () if jax.default_backend() == "cpu" else (2,)
 
-        def step(key, t, state_g, params, batch_items, bcount):
+        if controller is None:
+            tick = _make_sharded_tick(sampler, model, retrain_every)
+
+            def step(key, t, state_g, params, batch_items, bcount):
+                me = jax.lax.axis_index(axis)
+                state = jax.tree_util.tree_map(lambda a: a[me], state_g)
+                state, params, metrics = tick(key, t, state, params,
+                                              batch_items, bcount[0])
+                return distributed.gather_tree(state), params, metrics
+
+            return jax.jit(distributed.shard_map(
+                step, mesh=mesh,
+                in_specs=(P(), P(), P(), P(), P(axis), P(axis)),
+                out_specs=_replicated_out_specs(),
+            ), donate_argnums=donate)
+
+        ctick, _ = _make_controlled_sharded_ticks(sampler, model, controller,
+                                                  retrain_every)
+
+        def cstep(key, t, state_g, params, cstate, batch_items, bcount):
             me = jax.lax.axis_index(axis)
             state = jax.tree_util.tree_map(lambda a: a[me], state_g)
-            state, params, metrics = tick(key, t, state, params,
-                                          batch_items, bcount[0])
-            return distributed.gather_tree(state), params, metrics
+            (state, params, cstate), metrics = ctick(
+                key, t, (state, params, cstate), batch_items, bcount[0]
+            )
+            return distributed.gather_tree(state), params, cstate, metrics
 
-        donate = () if jax.default_backend() == "cpu" else (2,)
         return jax.jit(distributed.shard_map(
-            step, mesh=mesh,
-            in_specs=(P(), P(), P(), P(), P(axis), P(axis)),
-            out_specs=_replicated_out_specs(),
+            cstep, mesh=mesh,
+            in_specs=(P(), P(), P(), P(), P(), P(axis), P(axis)),
+            out_specs=(P(), P(), P(), P()),
         ), donate_argnums=donate)
 
     return _memoized(
-        "sharded_manage_step", (sampler, model, mesh, retrain_every), build
+        "sharded_manage_step",
+        (sampler, model, mesh, retrain_every, controller), build
     )
 
 

@@ -288,7 +288,7 @@ def test_manage_step_composes_with_fused_loop():
     _, _, trace = make_run_loop(sampler, model, retrain_every=2)(
         key, batches, bcounts)
 
-    tick = jax.jit(make_manage_step(sampler, model, retrain_every=2))
+    tick = make_manage_step(sampler, model, retrain_every=2)  # jitted
     state, params = sampler.init(item_proto(batches)), model.init()
     metrics = []
     for t in range(10):
@@ -297,6 +297,35 @@ def test_manage_step_composes_with_fused_loop():
         metrics.append(float(m["metric"]))
     np.testing.assert_allclose(np.asarray(trace["metric"]), metrics,
                                rtol=1e-6)
+
+
+def test_manage_step_donates_and_keeps_reservoir_on_device():
+    """ROADMAP PR-3 follow-up (c): the LOCAL per-tick driver donates the
+    reservoir state (off-CPU, matching the sharded driver) and never forces
+    a per-tick host copy of it -- the whole per-tick drive runs under a
+    device-to-host transfer guard; metrics are pulled only afterwards."""
+    sampler = make_sampler("rtbs", n=32, lam=0.1)
+    model = make_model("linreg", dim=2)
+    batches, bcounts = materialize_stream(LinRegStream(seed=2), 8,
+                                          batch_size=16)
+    tick = make_manage_step(sampler, model, retrain_every=2)
+    assert tick is make_manage_step(sampler, model, retrain_every=2)
+    key = jax.random.key(0)
+    state, params = sampler.init(item_proto(batches)), model.init()
+    ts = [jnp.int32(t) for t in range(8)]
+    bts = [jax.tree_util.tree_map(lambda a: a[t], batches) for t in range(8)]
+    metrics = []
+    with jax.transfer_guard_device_to_host("disallow"):
+        for t in range(8):
+            prev = state
+            state, params, m = tick(key, ts[t], state, params, bts[t],
+                                    bcounts[t])
+            metrics.append(m["metric"])
+            if jax.default_backend() != "cpu":
+                # donation: the consumed snapshot's buffers are reused
+                assert all(a.is_deleted()
+                           for a in jax.tree_util.tree_leaves(prev))
+    assert np.isfinite(np.asarray(jnp.stack(metrics))[1:]).all()
 
 
 def test_manage_loop_learns_linreg():

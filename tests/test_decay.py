@@ -146,6 +146,46 @@ def test_schedule_profiles_match_analytic():
         prof, [math.exp(-0.05 * (t + 1)) for t in range(4)], rtol=1e-6)
 
 
+def test_schedule_dt_wallclock_gaps():
+    """ROADMAP decay follow-up (b): ``tick(dstate, dt=...)`` consumes
+    wall-clock gaps. Exponential is exact (e^{-lam dt} for any real dt);
+    polynomial's telescoping ratio closes exactly over integral gaps;
+    schedules without a native dt form fall back to d^dt (documented)."""
+    lam = 0.3
+    e = dk.exponential(lam)
+    ds = e.init()
+    d3, ds3 = e.tick(ds, dt=3.0)
+    np.testing.assert_allclose(float(d3), math.exp(-3 * lam), rtol=1e-6)
+    assert int(ds3) == 3                    # counter advances by the gap
+    d_half, _ = e.tick(ds, dt=0.5)          # fractional gaps: still exact
+    np.testing.assert_allclose(float(d_half), math.exp(-0.5 * lam),
+                               rtol=1e-6)
+
+    p = dk.polynomial(1.3, t0=1.0)
+    ds = p.step(p.step(p.init()))           # counter at t=2
+    d2, ds2 = p.tick(ds, dt=2.0)
+    # exact telescoping: factor over [t, t+2) == d_t * d_{t+1}
+    want = float(p.rate(jnp.int32(2))) * float(p.rate(jnp.int32(3)))
+    np.testing.assert_allclose(float(d2), want, rtol=1e-6)
+    assert int(ds2) == 4
+
+    c = dk.from_callable(lambda t: jnp.float32(0.9))
+    d4, ds4 = c.tick(c.init(), dt=4.0)      # fallback: rate ** dt
+    np.testing.assert_allclose(float(d4), 0.9 ** 4, rtol=1e-6)
+    assert int(ds4) == 4
+    # sub-unit gaps ACCUMULATE (no round-away freeze): 3 gaps of 0.4 move
+    # the elapsed-time counter to 1.2, and a time-varying rate moves with it
+    ds = p.init()
+    for _ in range(3):
+        _, ds = p.tick(ds, dt=0.4)
+    np.testing.assert_allclose(float(ds), 1.2, rtol=1e-6)
+    assert float(p.rate(ds)) != float(p.rate(p.init()))
+    # dt=None keeps the historical unit-tick behaviour bit-for-bit
+    d1a, s1a = e.tick(e.init())
+    d1b, s1b = e.tick(e.init(), dt=None)
+    assert float(d1a) == float(d1b) and int(s1a) == int(s1b)
+
+
 def test_schedule_validation():
     with pytest.raises(ValueError, match="lam >= 0"):
         dk.exponential(-0.1)
