@@ -11,7 +11,7 @@ import json
 import pathlib
 import sys
 
-from .common import BENCH_SCHEMA_KEYS, REPO_ROOT
+from .common import BENCH_SCHEMA_KEYS, PROVENANCE_KEYS, REPO_ROOT
 
 #: per-suite required derived fields on at least one row (the criterion rows)
 REQUIRED_ROW_FIELDS = {
@@ -21,6 +21,7 @@ REQUIRED_ROW_FIELDS = {
                     "es10"),
     "bank_step": ("scheme", "K", "impl", "keys_touched", "keys_per_s",
                   "items_per_s"),
+    "obs_overhead": ("overhead_pct",),
 }
 
 
@@ -33,6 +34,14 @@ def check_file(path: pathlib.Path) -> list[str]:
     for k in BENCH_SCHEMA_KEYS:
         if k not in payload:
             errors.append(f"{path.name}: missing top-level key {k!r}")
+    # run provenance (who/what/when produced the numbers) is mandatory
+    prov = payload.get("provenance")
+    if not isinstance(prov, dict):
+        errors.append(f"{path.name}: provenance must be a dict")
+    else:
+        for k in PROVENANCE_KEYS:
+            if k not in prov:
+                errors.append(f"{path.name}: provenance missing {k!r}")
     rows = payload.get("rows", [])
     if not isinstance(rows, list) or not rows:
         errors.append(f"{path.name}: rows must be a non-empty list")

@@ -1,0 +1,110 @@
+"""Validate a telemetry JSONL stream against the repro.obs record schema.
+
+Usage: ``python -m benchmarks.check_telemetry path/to/telemetry.jsonl [...]``
+Exits non-zero on the first violation -- the CI telemetry job gates on this
+after running a short instrumented loop, so the drained record format
+(DESIGN.md Sec. 14) stays parseable for downstream dashboards.
+
+Checks per file: every line is a JSON object with a known ``kind``; the
+stream opens with a ``run`` header carrying the static run facts; ``tick``
+records carry the required gauge columns with sane types, and their ``t``
+values are non-decreasing (drains are ordered); ``warning`` records carry
+``monitor`` + ``message``.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+KINDS = ("run", "tick", "warning", "query")
+
+RUN_KEYS = ("run", "ticks", "every", "backend", "jax")
+TICK_KEYS = ("t", "metric", "size")
+WARNING_KEYS = ("monitor", "message")
+QUERY_KEYS = ("query", "tokens_served")
+
+
+def check_file(path: pathlib.Path) -> list[str]:
+    errors: list[str] = []
+    try:
+        lines = path.read_text().splitlines()
+    except OSError as e:
+        return [f"{path.name}: unreadable ({e})"]
+    if not lines:
+        return [f"{path.name}: empty telemetry stream"]
+    records = []
+    for i, line in enumerate(lines):
+        try:
+            rec = json.loads(line)
+        except json.JSONDecodeError as e:
+            errors.append(f"{path.name}:{i + 1}: not JSON ({e})")
+            continue
+        if not isinstance(rec, dict):
+            errors.append(f"{path.name}:{i + 1}: record must be an object")
+            continue
+        if rec.get("kind") not in KINDS:
+            errors.append(
+                f"{path.name}:{i + 1}: unknown kind {rec.get('kind')!r}"
+            )
+            continue
+        records.append((i + 1, rec))
+    if not records:
+        return errors or [f"{path.name}: no valid records"]
+
+    serve = any(r.get("mode") == "serve" for _, r in records
+                if r["kind"] == "run")
+    first = records[0][1]
+    if first["kind"] != "run":
+        errors.append(f"{path.name}: stream must open with a run header; "
+                      f"got kind={first['kind']!r}")
+    elif not serve:
+        for k in RUN_KEYS:
+            if k not in first:
+                errors.append(f"{path.name}: run header missing {k!r}")
+
+    last_t = None
+    for ln, rec in records:
+        if rec["kind"] == "tick":
+            for k in TICK_KEYS:
+                if k not in rec:
+                    errors.append(f"{path.name}:{ln}: tick missing {k!r}")
+            t = rec.get("t")
+            if not isinstance(t, int):
+                errors.append(f"{path.name}:{ln}: tick t must be int")
+            elif last_t is not None and t < last_t:
+                errors.append(f"{path.name}:{ln}: tick t went backwards "
+                              f"({last_t} -> {t}); drains must be ordered")
+            else:
+                last_t = t
+        elif rec["kind"] == "warning":
+            for k in WARNING_KEYS:
+                if k not in rec:
+                    errors.append(f"{path.name}:{ln}: warning missing {k!r}")
+        elif rec["kind"] == "query":
+            for k in QUERY_KEYS:
+                if k not in rec:
+                    errors.append(f"{path.name}:{ln}: query missing {k!r}")
+        if rec["kind"] == "run":
+            last_t = None  # a new run restarts the tick clock
+    return errors
+
+
+def main() -> None:
+    paths = [pathlib.Path(a) for a in sys.argv[1:]]
+    if not paths:
+        raise SystemExit(
+            "usage: python -m benchmarks.check_telemetry <telemetry.jsonl>..."
+        )
+    errors = []
+    for p in paths:
+        errors += check_file(p)
+    for e in errors:
+        print(f"TELEMETRY SCHEMA ERROR: {e}", file=sys.stderr)
+    if errors:
+        raise SystemExit(1)
+    print(f"ok: {', '.join(p.name for p in paths)} valid")
+
+
+if __name__ == "__main__":
+    main()

@@ -12,9 +12,44 @@ REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
 #: every BENCH_*.json written by a suite follows this shape (validated by
 #: benchmarks/check_bench.py and the CI bench-smoke job):
 #:   {"benchmark": str, "generated_unix": float, "jax": str, "backend": str,
-#:    "smoke": bool, "rows": [{"name": str, "us_per_call": float, ...derived}]}
+#:    "smoke": bool, "provenance": {...}, "rows": [{"name": str,
+#:    "us_per_call": float, ...derived}]}
 BENCH_SCHEMA_KEYS = ("benchmark", "generated_unix", "jax", "backend", "smoke",
-                     "rows")
+                     "provenance", "rows")
+
+#: the run-provenance block every BENCH_*.json must carry so a number can be
+#: traced to the software + hardware + tree that produced it
+PROVENANCE_KEYS = ("jax", "backend", "device_kind", "commit", "timestamp")
+
+
+def run_provenance() -> dict:
+    """Where/when/what produced this benchmark run: jax version, backend and
+    device kind, the repo commit (None outside a git checkout), and a UTC
+    timestamp. Embedded in every BENCH_*.json (and usable by any other
+    artifact writer)."""
+    import datetime
+    import subprocess
+
+    import jax
+
+    try:
+        proc = subprocess.run(
+            ["git", "rev-parse", "HEAD"], cwd=str(REPO_ROOT),
+            capture_output=True, text=True, timeout=10,
+        )
+        commit = proc.stdout.strip() if proc.returncode == 0 else None
+    except Exception:  # noqa: BLE001 -- no git binary / not a checkout
+        commit = None
+    dev = jax.devices()[0]
+    return {
+        "jax": jax.__version__,
+        "backend": jax.default_backend(),
+        "device_kind": getattr(dev, "device_kind", str(dev)),
+        "commit": commit or None,
+        "timestamp": datetime.datetime.now(
+            datetime.timezone.utc
+        ).isoformat(timespec="seconds"),
+    }
 
 
 def smoke_mode() -> bool:
@@ -39,6 +74,7 @@ def write_bench_json(benchmark: str, rows, *, smoke: bool | None = None):
         "jax": jax.__version__,
         "backend": jax.default_backend(),
         "smoke": smoke_mode() if smoke is None else smoke,
+        "provenance": run_provenance(),
         "rows": [
             {"name": name, "us_per_call": round(float(us), 2), **derived}
             for name, us, derived in rows

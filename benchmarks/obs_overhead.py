@@ -1,0 +1,155 @@
+"""Telemetry overhead: the fused loops with in-scan telemetry ON vs OFF.
+
+The acceptance criterion for repro.obs (DESIGN.md Sec. 14) is that the
+in-scan stats rows + boundary drains cost <= 5% on the hot paths:
+
+  * ``obs_manage_cap4096``  -- :func:`repro.manage.make_run_loop` over the
+    R-TBS fused sampler at the sampler-step criterion sizing (cap 4096,
+    bcap 512, saturated steady state -- the ``rtbs_fused_sat_cap4096``
+    configuration of benchmarks/sampler_step.py, run as a loop);
+  * ``obs_bank_K4096``      -- the K=4096 bank step: ``step_stats`` (the
+    stats-returning closure every instrumented loop drives) vs ``step``.
+
+Both points time telemetry-off and telemetry-on over the same inputs and
+record ``overhead_pct``; the telemetry handle drains into an in-memory sink
+at the default 64-tick period, so the measured cost includes row stacking,
+the drain callback, and host fan-out -- the full instrumented path. Equality
+of the on/off traces is asserted before timing (the bit-identity contract,
+unit-tested in tests/test_obs.py). Emits ``BENCH_obs_overhead.json``
+(EXPERIMENTS.md §Telemetry-overhead).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.bank import make_bank
+from repro.core.api import make_sampler
+from repro.data.streams import LinRegStream, mode_schedule
+from repro.manage import make_model, make_run_loop, materialize_stream
+from repro.obs import MemorySink, Telemetry
+
+from .common import smoke_mode, write_bench_json
+
+LAM = 0.05
+D = 8
+CAP = 4096
+BCAP = 512
+K = 4096
+EVERY = 64
+
+
+def _best_of_pair(fa, fb, iters, *args):
+    """Best-of-N wall seconds for two functions over the same inputs,
+    measured INTERLEAVED (a, b, a, b, ...) so CPU frequency / load drift
+    hits both sides equally -- an on/off overhead ratio from sequential
+    blocks can swing several percent on a busy host. Min per side: noise
+    only adds time."""
+    jax.block_until_ready(fa(*args))
+    jax.block_until_ready(fb(*args))
+    ta, tb = [], []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fa(*args))
+        ta.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        jax.block_until_ready(fb(*args))
+        tb.append(time.perf_counter() - t0)
+    return float(np.min(ta)), float(np.min(tb))
+
+
+def _tree_equal(a, b):
+    for x, y in zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def manage_rows(cap: int, bcap: int, T: int, iters: int):
+    """The fused manage loop at the rtbs_fused_sat_cap4096 sizing, telemetry
+    on vs off over an identical stream."""
+    sampler = make_sampler("rtbs", n=cap, lam=LAM)
+    model = make_model("linreg", dim=2)
+    batches, bcounts = materialize_stream(
+        LinRegStream(seed=0), T, batch_size=bcap,
+        mode=lambda t: mode_schedule("periodic", t),
+    )
+    key = jax.random.key(0)
+    retrain_every = 8
+
+    off = make_run_loop(sampler, model, retrain_every=retrain_every,
+                        superbatch=8)
+    tel = Telemetry([MemorySink(capacity=4 * T)], every=EVERY, monitors=())
+    on = make_run_loop(sampler, model, retrain_every=retrain_every,
+                       superbatch=8, telemetry=tel)
+
+    out_off = off(key, batches, bcounts)
+    out_on = on(key, batches, bcounts)
+    _tree_equal(out_off, out_on)  # the bit-identity contract
+
+    t_off, t_on = _best_of_pair(off, on, iters, key, batches, bcounts)
+    pct = (t_on - t_off) / t_off * 100
+    us_off, us_on = t_off / T * 1e6, t_on / T * 1e6
+    return [
+        (f"obs_manage_cap{cap}_off", us_off,
+         {"telemetry": "off", "cap": cap, "bcap": bcap, "ticks": T,
+          "ticks_per_s": round(T / t_off, 1)}),
+        (f"obs_manage_cap{cap}_on", us_on,
+         {"telemetry": "on", "cap": cap, "bcap": bcap, "ticks": T,
+          "every": EVERY, "ticks_per_s": round(T / t_on, 1),
+          "overhead_pct": round(pct, 2)}),
+    ]
+
+
+def bank_rows(K: int, T: int, iters: int):
+    """The K-key bank step: the stats-returning closure vs the plain step."""
+    n, bcap, b = 64, 32, 256
+    bank = make_bank("rtbs", num_keys=K, n=n, lam=LAM, bcap=bcap)
+    rng = np.random.default_rng(0)
+    keys_np = rng.integers(0, K, (T, b)).astype(np.int32)
+    payload = jnp.asarray(rng.normal(size=(b, D)).astype(np.float32))
+    proto = jax.ShapeDtypeStruct((D,), jnp.float32)
+    state = bank.init(proto)
+    key = jax.random.key(0)
+    step = jax.jit(bank.step)
+    step_stats = jax.jit(bank.step_stats)
+    for t in range(4):  # warm to steady state + compile both
+        kt = jax.random.fold_in(key, t)
+        kj = jnp.asarray(keys_np[t])
+        state = step(kt, state, kj, payload, jnp.int32(b))
+        st2, _ = step_stats(kt, state, kj, payload, jnp.int32(b))
+    _tree_equal(step(key, state, jnp.asarray(keys_np[0]), payload,
+                     jnp.int32(b)),
+                step_stats(key, state, jnp.asarray(keys_np[0]), payload,
+                           jnp.int32(b))[0])
+    kj = jnp.asarray(keys_np[0])
+
+    t_off, t_on = _best_of_pair(step, step_stats, iters, key, state, kj,
+                                payload, jnp.int32(b))
+    pct = (t_on - t_off) / t_off * 100
+    return [
+        (f"obs_bank_K{K}_off", t_off * 1e6,
+         {"telemetry": "off", "K": K, "bcap": bcap, "b": b,
+          "steps_per_s": round(1 / t_off, 1)}),
+        (f"obs_bank_K{K}_on", t_on * 1e6,
+         {"telemetry": "on", "K": K, "bcap": bcap, "b": b,
+          "steps_per_s": round(1 / t_on, 1),
+          "overhead_pct": round(pct, 2)}),
+    ]
+
+
+def run():
+    smoke = smoke_mode()
+    cap, bcap, T, iters = (64, 16, 32, 3) if smoke else (CAP, BCAP, 128, 9)
+    kk, tk = (64, 8) if smoke else (K, 8)
+    rows = manage_rows(cap, bcap, T, iters)
+    rows += bank_rows(kk, tk, iters=3 if smoke else 30)
+    write_bench_json("obs_overhead", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    from .common import emit
+
+    emit(run())

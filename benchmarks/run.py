@@ -14,6 +14,8 @@ report). Prints ``name,us_per_call,derived`` CSV.
             drift scenarios (writes BENCH_decay_sweep.json)
   bank   -- keyed multi-tenant bank step vs naive per-key dispatch at
             growing K (writes BENCH_bank_step.json)
+  obs    -- in-scan telemetry on/off overhead on the fused manage loop and
+            the K=4096 bank step (writes BENCH_obs_overhead.json)
   roofline -- dry-run roofline table (EXPERIMENTS.md §Roofline)
 
 Select with ``python -m benchmarks.run [names...]`` (default: all).
@@ -27,7 +29,7 @@ import time
 from .common import emit
 
 SUITES = ["fig1", "table1", "fig12", "fig13", "fig789", "manage", "sampler",
-          "decay", "bank", "roofline"]
+          "decay", "bank", "obs", "roofline"]
 
 
 def main() -> None:
@@ -52,6 +54,8 @@ def main() -> None:
             from . import decay_sweep as m
         elif name == "bank":
             from . import bank_step as m
+        elif name == "obs":
+            from . import obs_overhead as m
         elif name == "roofline":
             from . import roofline as m
         else:

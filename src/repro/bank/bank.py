@@ -54,6 +54,7 @@ from repro.core.api import SampleView
 from repro.decay import DecaySchedule
 from repro.decay import resolve as _resolve_schedule
 from repro.kernels.tbs_step import ops as tbs_ops
+from repro.obs.profile import scope as _scope
 
 from . import routing
 
@@ -101,6 +102,15 @@ class SamplerBank:
       * ``step_decayed(key, state, keys, payload, bcount, d)`` -- the step
         with the tick's decay factor supplied from outside (scalar or [K]:
         a per-key closed-loop controller drives exactly this).
+      * ``step_stats`` / ``step_decayed_stats`` -- the same steps, returning
+        ``(BankState, stats)`` where ``stats`` surfaces the tick's routing
+        accounting that ``step`` computes internally: ``overflow`` (total
+        items dropped by the per-key ``bcap``/capacity bounds this tick),
+        ``ntouched`` (distinct arriving keys), ``invalid`` (rows with
+        out-of-range key ids), ``decay`` (the applied factor, scalar or
+        [K]). The manage loops use these so overflow is VISIBLE in their
+        metrics dict instead of silently accumulating in
+        ``BankState.overflow``.
       * ``extract(key, state, key_ids) -> SampleView`` -- realize the listed
         keys' samples, stacked: item leaves [Q, cap, ...], mask [Q, cap],
         size [Q]. Pending (deferred) decay is applied IN the view.
@@ -122,6 +132,8 @@ class SamplerBank:
     size: Callable[[jax.Array, BankState, jax.Array], jax.Array]
     base_rate: Callable[..., jax.Array]
     hyper: Mapping[str, Any]
+    step_stats: Callable[..., tuple] | None = None
+    step_decayed_stats: Callable[..., tuple] | None = None
 
     def __repr__(self) -> str:
         hp = ", ".join(f"{k}={v}" for k, v in self.hyper.items())
@@ -186,23 +198,32 @@ def _init_bank_state(item_proto: Any, num_keys: int, cap: int,
 
 
 def _make_steps(sched_tick, advance):
-    """(step, step_decayed) from a scheme's ``advance(key, state, keys,
-    payload, bcount, d, new_dstate)``: ``step`` pulls the tick's factor from
-    the shared schedule (optionally over a wall-clock gap ``dt``);
-    ``step_decayed`` applies an external factor (scalar or [K], the
-    controller's entry point) while the schedule bookkeeping still advances
-    -- the same contract as :func:`repro.core.api._thread_schedule`."""
+    """(step, step_decayed, step_stats, step_decayed_stats) from a scheme's
+    ``advance(key, state, keys, payload, bcount, d, new_dstate) -> (state,
+    stats)``: ``step`` pulls the tick's factor from the shared schedule
+    (optionally over a wall-clock gap ``dt``); ``step_decayed`` applies an
+    external factor (scalar or [K], the controller's entry point) while the
+    schedule bookkeeping still advances -- the same contract as
+    :func:`repro.core.api._thread_schedule`. The ``*_stats`` twins return
+    the tick's routing stats alongside (see :class:`SamplerBank`); the
+    plain forms drop them, keeping the historical signature."""
 
-    def step(key, state, keys, payload, bcount, dt=None):
+    def step_stats(key, state, keys, payload, bcount, dt=None):
         d, new_dstate = sched_tick(state.dstate, dt)
         return advance(key, state, keys, payload, bcount, d, new_dstate)
 
-    def step_decayed(key, state, keys, payload, bcount, d):
+    def step_decayed_stats(key, state, keys, payload, bcount, d):
         _, new_dstate = sched_tick(state.dstate, None)
         return advance(key, state, keys, payload, bcount,
                        jnp.asarray(d, jnp.float32), new_dstate)
 
-    return step, step_decayed
+    def step(key, state, keys, payload, bcount, dt=None):
+        return step_stats(key, state, keys, payload, bcount, dt)[0]
+
+    def step_decayed(key, state, keys, payload, bcount, d):
+        return step_decayed_stats(key, state, keys, payload, bcount, d)[0]
+
+    return step, step_decayed, step_stats, step_decayed_stats
 
 
 def _check_key_ids(key_ids, num_keys: int) -> jax.Array:
@@ -256,6 +277,18 @@ def _fold_keys(key: jax.Array, touched: jax.Array) -> jax.Array:
     return jax.vmap(lambda k_id: jax.random.fold_in(key, k_id))(touched)
 
 
+def _tick_stats(r: "routing.Routing", overflow, d) -> dict:
+    """The step's visible routing accounting (the ``*_stats`` closures'
+    second return): per-tick totals, all scalars except ``decay`` which
+    keeps the caller's scalar-or-[K] shape."""
+    return {
+        "overflow": jnp.asarray(overflow, jnp.int32),
+        "ntouched": r.ntouched,
+        "invalid": r.invalid,
+        "decay": jnp.asarray(d, jnp.float32),
+    }
+
+
 def _route_and_gather(keys, payload, bcount, *, num_keys: int, bcap: int):
     r = routing.route(keys, bcount, num_keys=num_keys, bcap=bcap)
     sub = routing.subbatches(r, payload, bcap=bcap)
@@ -289,26 +322,30 @@ def _make_rtbs_bank(*, num_keys: int, n: int, lam: float | None = None,
                  new_dstate) -> BankState:
         # inactive-key fast path: every key's deferred factor composes the
         # tick's decay -- one [K] multiply, no payload movement
-        pending = state.pending * d
-        r, sub, idx = _route_and_gather(keys, payload, bcount,
-                                       num_keys=K, bcap=bcap)
-        tkeys = _fold_keys(key, r.touched)
-        d_eff = pending[idx]            # composed decay since last touch
-        src, C3, w_new = jax.vmap(
-            lambda kk, k0, C, W, cnt, dd: rtbs.tick_map(
-                kk, k0, C, W, cnt, dd, cap=cap, bcap=bcap, n=n
+        with _scope("bank.decay"):
+            pending = state.pending * d
+        with _scope("bank.route"):
+            r, sub, idx = _route_and_gather(keys, payload, bcount,
+                                            num_keys=K, bcap=bcap)
+        with _scope("bank.tick_map"):
+            tkeys = _fold_keys(key, r.touched)
+            d_eff = pending[idx]        # composed decay since last touch
+            src, C3, w_new = jax.vmap(
+                lambda kk, k0, C, W, cnt, dd: rtbs.tick_map(
+                    kk, k0, C, W, cnt, dd, cap=cap, bcap=bcap, n=n
+                )
+            )(tkeys, state.nfull[idx], state.weight[idx],
+              state.total_weight[idx], r.counts, d_eff)
+        with _scope("bank.payload"):
+            items_t = lt.gather(state.items, idx)  # [T, cap, ...]
+            new_items_t = tbs_ops.tbs_step_apply_banked(items_t, sub, src,
+                                                        impl=impl)
+            items = jax.tree_util.tree_map(
+                lambda a, o: a.at[r.touched].set(o, mode="drop"),
+                state.items, new_items_t,
             )
-        )(tkeys, state.nfull[idx], state.weight[idx],
-          state.total_weight[idx], r.counts, d_eff)
-        items_t = lt.gather(state.items, idx)      # [T, cap, ...]
-        new_items_t = tbs_ops.tbs_step_apply_banked(items_t, sub, src,
-                                                    impl=impl)
-        items = jax.tree_util.tree_map(
-            lambda a, o: a.at[r.touched].set(o, mode="drop"),
-            state.items, new_items_t,
-        )
         k3, _ = lt.floor_frac(C3)
-        return BankState(
+        new_state = BankState(
             items=items,
             nfull=_scatter(state.nfull, r.touched, k3),
             weight=_scatter(state.weight, r.touched, C3),
@@ -317,8 +354,11 @@ def _make_rtbs_bank(*, num_keys: int, n: int, lam: float | None = None,
             overflow=state.overflow.at[r.touched].add(r.dropped, mode="drop"),
             dstate=new_dstate,
         )
+        return new_state, _tick_stats(r, r.overflow, d)
 
-    step, step_decayed = _make_steps(sched_tick, _advance)
+    step, step_decayed, step_stats, step_decayed_stats = _make_steps(
+        sched_tick, _advance
+    )
 
     def _effective(state: BankState, idx):
         w_eff = state.pending[idx] * state.total_weight[idx]
@@ -360,7 +400,8 @@ def _make_rtbs_bank(*, num_keys: int, n: int, lam: float | None = None,
         scheme="rtbs", num_keys=K, cap=cap, bcap=bcap, init=init, step=step,
         step_decayed=step_decayed, extract=extract, size=size,
         base_rate=lambda state, dt=None: sched_rate(state.dstate, dt),
-        hyper=hyper,
+        hyper=hyper, step_stats=step_stats,
+        step_decayed_stats=step_decayed_stats,
     )
 
 
@@ -435,7 +476,7 @@ def _make_ttbs_bank(*, num_keys: int, n: int, lam: float | None = None,
         )
         w_new = p_eff * state.total_weight[idx] \
             + r.counts.astype(jnp.float32)
-        return BankState(
+        new_state = BankState(
             items=items,
             nfull=_scatter(state.nfull, r.touched, new_count),
             weight=_scatter(state.weight, r.touched,
@@ -447,8 +488,14 @@ def _make_ttbs_bank(*, num_keys: int, n: int, lam: float | None = None,
             ),
             dstate=new_dstate,
         )
+        ov = r.overflow + jnp.where(
+            jnp.arange(dropped_cap.shape[0]) < r.ntouched, dropped_cap, 0
+        ).sum()
+        return new_state, _tick_stats(r, ov, d)
 
-    step, step_decayed = _make_steps(sched_tick, _advance)
+    step, step_decayed, step_stats, step_decayed_stats = _make_steps(
+        sched_tick, _advance
+    )
 
     def _keep_mask(key, state, idx):
         # the T-TBS sample IS the buffer; pending retention (a composed
@@ -482,5 +529,6 @@ def _make_ttbs_bank(*, num_keys: int, n: int, lam: float | None = None,
         scheme="ttbs", num_keys=K, cap=cap, bcap=bcap, init=init, step=step,
         step_decayed=step_decayed, extract=extract, size=size,
         base_rate=lambda state, dt=None: sched_rate(state.dstate, dt),
-        hyper=hyper,
+        hyper=hyper, step_stats=step_stats,
+        step_decayed_stats=step_decayed_stats,
     )

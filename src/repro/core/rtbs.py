@@ -46,6 +46,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.tbs_step import ops as tbs_ops
+from repro.obs.profile import scope as _scope
 
 from . import latent as lt
 from . import rng
@@ -227,9 +228,12 @@ def step(
     bcount = jnp.asarray(bcount, jnp.int32)
     bcap = jax.tree_util.tree_leaves(batch_items)[0].shape[0]
 
-    src, C3, w_new = _tick_map(key, state, bcount, bcap, n=n, decay=decay)
-    k3, _ = lt.floor_frac(C3)
-    new_items = tbs_ops.tbs_step_apply(state.lat.items, batch_items, src, impl=impl)
+    with _scope("rtbs.tick_map"):
+        src, C3, w_new = _tick_map(key, state, bcount, bcap, n=n, decay=decay)
+        k3, _ = lt.floor_frac(C3)
+    with _scope("rtbs.payload"):
+        new_items = tbs_ops.tbs_step_apply(state.lat.items, batch_items, src,
+                                           impl=impl)
     return RTBSState(
         lat=lt.Latent(items=new_items, nfull=k3, weight=C3),
         total_weight=w_new,

@@ -102,6 +102,11 @@ class AdaptiveDecay:
     rate: Callable[[ControllerState], jax.Array]
     observe: Callable[[ControllerState, jax.Array, jax.Array], ControllerState]
     hyper: Mapping[str, Any]
+    # optional telemetry gauge extractor (repro.obs, DESIGN.md Sec. 14):
+    # ``stats(cstate) -> {"lam", "hold", "pulse", ...}`` -- jit-safe scalar
+    # columns for the drained tick records. Kept OUT of ControllerState so
+    # checkpointed controller pytrees are unchanged.
+    stats: Callable[[ControllerState], Mapping[str, jax.Array]] | None = None
 
     def __repr__(self) -> str:
         hp = ", ".join(f"{k}={v}" for k, v in self.hyper.items())
@@ -180,11 +185,23 @@ def loss_ratio(*, lam0: float, lam_min: float, lam_max: float,
         return ControllerState(loglam=loglam, fast=fast, slow=slow,
                                seen=seen, hold=hold)
 
+    def stats(c: ControllerState) -> dict:
+        # pulse detection is derivable, not stored: observe() sets the
+        # refractory counter to exactly ``cooldown`` ONLY on a pulse tick
+        # (otherwise it decrements toward 0), so hold == cooldown flags the
+        # pulse without touching the checkpointed ControllerState layout
+        return {
+            "lam": jnp.exp(c.loglam),
+            "hold": c.hold,
+            "pulse": (cooldown > 0) & (c.hold == cooldown),
+        }
+
     return AdaptiveDecay(
         name="loss_ratio",
         init=init,
         rate=rate,
         observe=observe,
+        stats=stats,
         hyper={"lam0": lam0, "lam_min": lam_min, "lam_max": lam_max,
                "fast_alpha": fast_alpha, "slow_alpha": slow_alpha,
                "fire": fire, "gain_down": gain_down, "relax": relax,

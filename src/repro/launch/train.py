@@ -46,6 +46,7 @@ Examples:
 from __future__ import annotations
 
 import argparse
+import contextlib
 import math
 import os
 import sys
@@ -69,6 +70,8 @@ from repro.manage import (
     shard_stream,
 )
 from repro.models import zoo
+from repro.obs import make_telemetry, profile_span
+from repro.obs import probe as obs_probe
 from repro.optim import AdamWConfig, adamw_init
 from repro.train.steps import make_train_step
 
@@ -128,7 +131,25 @@ def build_decay(args):
     return sched, controller
 
 
-def _log_sharded_trace(trace, t0, mode_of, log):
+def build_telemetry(args):
+    """The run's :class:`repro.obs.Telemetry` handle from the CLI knobs
+    (None when telemetry is off -- the loops then compile the historical,
+    drain-free programs)."""
+    if not (args.telemetry_dir or args.telemetry_stdout):
+        return None
+    return make_telemetry(args.telemetry_dir, stdout=args.telemetry_stdout,
+                          every=args.telemetry_every)
+
+
+def profile_cm(args):
+    """A profiler span over whatever it wraps: the whole fused program, or
+    the first ``--profile-ticks`` ticks of the per-tick driver."""
+    if not args.profile_dir:
+        return contextlib.nullcontext()
+    return profile_span(args.profile_dir)
+
+
+def _log_sharded_trace(trace, t0, mode_of, log, telemetry=None):
     metric = jax.device_get(trace["metric"])
     size = jax.device_get(trace["size"])
     dec = jax.device_get(trace["decay"]) if "decay" in trace else None
@@ -141,9 +162,17 @@ def _log_sharded_trace(trace, t0, mode_of, log):
             row["lam"] = float(-math.log(max(float(dec[i]), 1e-30)))
             extra = f" lam={row['lam']:6.4f}"
         log.append(row)
+        if telemetry is not None:  # ckpt-segmented path: host-side records
+            telemetry.emit({"kind": "tick", "t": t,
+                            "metric": float(metric[i]),
+                            "size": int(size[i]),
+                            **({"decay": float(dec[i])}
+                               if dec is not None else {})})
         print(f"[train] tick={t:4d} mode={mode_of(t)} "
               f"eval={float(metric[i]):7.4f} |S|={int(size[i]):5d}{extra}",
               flush=True)
+    if telemetry is not None:
+        telemetry.flush()
 
 
 def run_sharded(args, adapter, stream, sampler, controller=None):
@@ -177,15 +206,20 @@ def run_sharded(args, adapter, stream, sampler, controller=None):
     key = jax.random.key(args.seed)
     log = []
 
+    telemetry = build_telemetry(args)
     if not args.ckpt_dir:
         run = make_sharded_run_loop(sampler, adapter, mesh,
                                     retrain_every=args.retrain_every,
                                     superbatch=args.superbatch,
-                                    controller=controller)
+                                    controller=controller,
+                                    telemetry=telemetry)
         print(f"[train] sharded {args.scheme} loop: {S} shards, "
               f"{args.ticks} ticks, one fused program", flush=True)
-        _, _, trace = run(key, batches, bcounts)
+        with profile_cm(args):
+            _, _, trace = run(key, batches, bcounts)
         _log_sharded_trace(trace, 0, mode_of, log)
+        if telemetry is not None:
+            telemetry.close()
         return log
 
     # checkpointed: ckpt_every-tick segments through the resume entry point
@@ -217,6 +251,11 @@ def run_sharded(args, adapter, stream, sampler, controller=None):
                   f"(tick {start_tick})")
     print(f"[train] sharded {args.scheme} loop: {S} shards, "
           f"{args.ticks} ticks, {seg}-tick checkpointed segments", flush=True)
+    if telemetry is not None:
+        telemetry.open_run({"scheme": args.scheme, "ticks": args.ticks,
+                            "segment": seg, "every": telemetry.every,
+                            "backend": jax.default_backend(),
+                            "jax": jax.__version__, "state_bytes": None})
 
     def cut(tree, lo, hi):
         return jax.tree_util.tree_map(lambda a: a[lo:hi], tree)
@@ -232,7 +271,7 @@ def run_sharded(args, adapter, stream, sampler, controller=None):
             state, params, trace = resume(
                 key, state, params, cut(batches, t0, t1), bcounts[t0:t1], t0)
             snap = (state, params, t1)
-        _log_sharded_trace(trace, t0, mode_of, log)
+        _log_sharded_trace(trace, t0, mode_of, log, telemetry=telemetry)
         # only retrain-cadence-aligned ticks are valid resume points (the
         # resume loop requires t0 % G == 0 and G | retrain_every): skip a
         # misaligned final partial segment -- a later --resume with more
@@ -241,6 +280,8 @@ def run_sharded(args, adapter, stream, sampler, controller=None):
         if t1 % args.retrain_every == 0:
             ckpt.save(t1, snap)
     ckpt.wait()
+    if telemetry is not None:
+        telemetry.close()
     return log
 
 
@@ -291,24 +332,31 @@ def run_bank(args, adapter, cfg):
             f"--num-keys supports the local time-biased schemes rtbs/ttbs; "
             f"got --scheme {args.scheme}"
         )
+    telemetry = build_telemetry(args)
     run = make_bank_run_loop(bank, adapter, retrain_every=args.retrain_every,
                              train_keys=range(Q),
-                             superbatch=args.superbatch)
+                             superbatch=args.superbatch,
+                             telemetry=telemetry)
     print(f"[train] bank {args.scheme} loop: K={K} keys, top-{Q} trained, "
           f"{args.ticks} ticks, one fused program", flush=True)
-    state, _, trace = run(jax.random.key(args.seed), batches, bcounts)
+    with profile_cm(args):
+        state, _, trace = run(jax.random.key(args.seed), batches, bcounts)
     metric = jax.device_get(trace["metric"])
     sizes = jax.device_get(trace["size"])
+    overflow = jax.device_get(trace["overflow"])
     log = []
     for t in range(args.ticks):
         row = {"tick": t, "eval_loss": float(metric[t]),
-               "train_key_sizes": [int(s) for s in sizes[t]]}
+               "train_key_sizes": [int(s) for s in sizes[t]],
+               "overflow": int(overflow[t])}
         log.append(row)
         print(f"[train] tick={t:4d} eval={float(metric[t]):7.4f} "
               f"|S|(top-{Q})={sizes[t].tolist()}", flush=True)
     ov = int(jax.device_get(state.overflow).sum())
     print(f"[train] bank done: routed-overflow={ov} items "
           f"(per-key bcap={bcap})", flush=True)
+    if telemetry is not None:
+        telemetry.close()
     return log
 
 
@@ -360,6 +408,21 @@ def main(argv=None):
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--telemetry-dir", default=None,
+                    help="write in-loop telemetry (one JSONL record per "
+                         "tick + health-monitor warnings) under this "
+                         "directory (repro.obs, DESIGN.md Sec. 14)")
+    ap.add_argument("--telemetry-every", type=int, default=64,
+                    help="telemetry drain period in ticks (fused loops "
+                         "round it to whole superbatch chunks)")
+    ap.add_argument("--telemetry-stdout", action="store_true",
+                    help="echo telemetry records to stdout")
+    ap.add_argument("--profile-dir", default=None,
+                    help="capture a jax.profiler trace (TensorBoard/"
+                         "Perfetto-loadable) under this directory")
+    ap.add_argument("--profile-ticks", type=int, default=8,
+                    help="per-tick driver: ticks to bracket with the "
+                         "profiler (fused loops capture the whole program)")
     args = ap.parse_args(argv)
 
     if args.scheme in DISTRIBUTED_SCHEMES:
@@ -440,8 +503,23 @@ def main(argv=None):
             start_tick = int(start_tick)
             print(f"[train] resumed from step {last} (tick {start_tick})")
 
+    telemetry = build_telemetry(args)
+    state_stats = obs_probe.make_state_stats(sampler)
+    d_static = obs_probe.static_decay(sampler)
+    if telemetry is not None:
+        telemetry.open_run({"scheme": args.scheme, "ticks": args.ticks,
+                            "superbatch": 1, "every": telemetry.every,
+                            "backend": jax.default_backend(),
+                            "jax": jax.__version__,
+                            "state_bytes": obs_probe.tree_nbytes(st)})
+    prof = contextlib.ExitStack()
+
     log = []
     for t in range(start_tick, args.ticks):
+        if args.profile_dir and t == start_tick:
+            prof.enter_context(profile_span(args.profile_dir))
+        if args.profile_dir and t == start_tick + args.profile_ticks:
+            prof.close()
         mode = 0 if args.drift == "none" else mode_schedule(args.drift, t)
         batch = jnp.asarray(stream.batch(t, args.batch_per_tick, mode))
 
@@ -490,6 +568,18 @@ def main(argv=None):
             row["lam"] = float(jnp.exp(cstate.loglam))
             extra = f" lam={row['lam']:6.4f}"
         log.append(row)
+        if telemetry is not None:
+            rec = {"kind": "tick", "t": t,
+                   "bcount": args.batch_per_tick,
+                   "metric": eval_loss, "size": size,
+                   "retrain": (t + 1) % args.retrain_every == 0}
+            rec.update({k: float(v) for k, v in state_stats(st).items()})
+            if controller is not None:
+                rec["decay"] = float(d_t)
+                rec["lam"] = row["lam"]
+            elif d_static is not None:
+                rec["decay"] = d_static
+            telemetry.emit(rec)
         print(f"[train] tick={t:4d} mode={mode} eval={eval_loss:7.4f} "
               f"train={train_loss:7.4f} |S|={size:5d} W={total_w:8.2f}"
               f"{extra}", flush=True)
@@ -498,8 +588,11 @@ def main(argv=None):
             snap = (model_state, st, cstate, t + 1) \
                 if controller is not None else (model_state, st, t + 1)
             ckpt.save(t + 1, snap)
+    prof.close()
     if ckpt:
         ckpt.wait()
+    if telemetry is not None:
+        telemetry.close()
     return log
 
 

@@ -45,10 +45,14 @@ from repro.manage.loop import (
     _memoized,
     _psum_metric,
     _superbatched_scan,
+    _telemetry_fetch_scan,
+    _telemetry_scan,
+    _wrap_run_header,
     item_proto,
     tick_keys,
 )
 from repro.manage.models import ModelAdapter
+from repro.obs import probe as _obs_probe
 
 KEY_FIELD = "key"
 
@@ -133,13 +137,19 @@ def _memo_key(train_keys) -> tuple:
 
 def _make_bank_ticks(bank: SamplerBank, model: ModelAdapter,
                      retrain_every: int, train_keys, per_key: bool,
-                     controller, metric_fn: Callable | None = None
-                     ) -> tuple[Callable, Callable]:
+                     controller, metric_fn: Callable | None = None,
+                     with_obs: bool = False) -> tuple[Callable, Callable]:
     """(full, fast) opaque-carry ticks for the bank loop, in the
     :func:`repro.manage.loop._superbatched_scan` contract. The fast tick is
     the full tick minus the retrain conditional and minus any controller
     adjustment (``adjust=False`` arithmetic), so superbatched runs stay
-    bit-identical to G=1."""
+    bit-identical to G=1.
+
+    The ticks step through the bank's ``step_stats`` closures so per-tick
+    routing overflow (dropped items) is surfaced as the ``"overflow"``
+    metrics column; ``with_obs=True`` additionally diverts the remaining
+    routing gauges (touched keys, invalid ids, the applied decay factor)
+    into the reserved ``"_obs"`` entry for :func:`_telemetry_scan`."""
     tk = _as_train_keys(train_keys, bank.num_keys)
     Q = tk.shape[0]
     shared_eval = metric_fn or (lambda p, b, c: model.evaluate(p, b, c))
@@ -154,22 +164,32 @@ def _make_bank_ticks(bank: SamplerBank, model: ModelAdapter,
         else:
             metric = shared_eval(params, payload, bcount)
         if controller is None:
-            state = bank.step(k_step, state, keys_t, payload, bcount)
+            state, bstats = bank.step_stats(k_step, state, keys_t, payload,
+                                            bcount)
         elif per_key:
             d_q = jax.vmap(controller.rate)(cstate)
             d_full = jnp.full((bank.num_keys,), bank.base_rate(state),
                               jnp.float32).at[tk].set(d_q)
-            state = bank.step_decayed(k_step, state, keys_t, payload,
-                                      bcount, d_full)
+            state, bstats = bank.step_decayed_stats(k_step, state, keys_t,
+                                                    payload, bcount, d_full)
             cstate = jax.vmap(controller.observe, in_axes=(0, 0, None))(
                 cstate, metric, adjust
             )
         else:
             d = controller.rate(cstate)
-            state = bank.step_decayed(k_step, state, keys_t, payload,
-                                      bcount, d)
+            state, bstats = bank.step_decayed_stats(k_step, state, keys_t,
+                                                    payload, bcount, d)
             cstate = controller.observe(cstate, metric, adjust)
-        return state, cstate, metric, (k_extract, k_fit)
+        return state, cstate, metric, bstats, (k_extract, k_fit)
+
+    def tick_metrics(k_extract, state, metric, bstats):
+        m = {"metric": metric, "size": bank.size(k_extract, state, tk),
+             "overflow": bstats["overflow"]}
+        if with_obs:
+            m["_obs"] = {"ntouched": bstats["ntouched"],
+                         "invalid": bstats["invalid"],
+                         "decay": bstats["decay"]}
+        return m
 
     def fit(k_extract, k_fit, state, params):
         view = bank.extract(k_extract, state, tk)
@@ -183,7 +203,7 @@ def _make_bank_ticks(bank: SamplerBank, model: ModelAdapter,
         state, params, *cs = carry
         cstate = cs[0] if cs else None
         do_fit = (t + 1) % retrain_every == 0
-        state, cstate, metric, (k_extract, k_fit) = eval_and_step(
+        state, cstate, metric, bstats, (k_extract, k_fit) = eval_and_step(
             key, t, state, params, cstate, batch, bcount, do_fit
         )
         params = jax.lax.cond(
@@ -191,21 +211,62 @@ def _make_bank_ticks(bank: SamplerBank, model: ModelAdapter,
             lambda: fit(k_extract, k_fit, state, params),
             lambda: params,
         )
-        m = {"metric": metric, "size": bank.size(k_extract, state, tk)}
+        m = tick_metrics(k_extract, state, metric, bstats)
         out = (state, params) + ((cstate,) if cs else ())
         return out, m
 
     def fast(key, t, carry, batch, bcount):
         state, params, *cs = carry
         cstate = cs[0] if cs else None
-        state, cstate, metric, (k_extract, _) = eval_and_step(
+        state, cstate, metric, bstats, (k_extract, _) = eval_and_step(
             key, t, state, params, cstate, batch, bcount, False
         )
-        m = {"metric": metric, "size": bank.size(k_extract, state, tk)}
+        m = tick_metrics(k_extract, state, metric, bstats)
         out = (state, params) + ((cstate,) if cs else ())
         return out, m
 
     return full, fast
+
+
+def _make_bank_stats(bank: SamplerBank, controller, per_key: bool,
+                     retrain_every: int, probe_key: int) -> Callable:
+    """The bank loop's telemetry row (DESIGN.md Sec. 14): per-tick routing
+    gauges (touched keys, invalid ids, overflow drops), the probed tenant's
+    Thm 4.1 self-check columns (:func:`repro.obs.probe.
+    make_bank_probe_stats`), the pending-decay magnitude across the bank
+    (min composed factor -- how much deferred decay the laziest key is
+    carrying), and the controller gauges (the probe/first train key's lane
+    under ``per_key``)."""
+    probe = _obs_probe.make_bank_probe_stats(bank, probe_key)
+    cstats = getattr(controller, "stats", None)
+
+    def stats_fn(t, batch, bcount, carry, m, obs):
+        t = jnp.asarray(t, jnp.int32)
+        keys_t, _ = _split_keyed(batch)
+        state = carry[0]
+        row = {
+            "t": t,
+            "bcount": jnp.asarray(bcount, jnp.int32),
+            "metric": jnp.asarray(m["metric"], jnp.float32),
+            "size": jnp.asarray(m["size"], jnp.int32),
+            "overflow": jnp.asarray(m["overflow"], jnp.int32),
+            "retrain": (t + 1) % retrain_every == 0,
+            "ntouched": jnp.asarray(obs["ntouched"], jnp.int32),
+            "invalid": jnp.asarray(obs["invalid"], jnp.int32),
+        }
+        d = jnp.asarray(obs["decay"], jnp.float32)
+        # a [K] per-key factor vector reports the probed tenant's lane
+        row["decay"] = d if d.ndim == 0 else d[probe_key]
+        row.update(probe(state, keys_t, bcount))
+        row["pending_min"] = jnp.asarray(state.pending.min(), jnp.float32)
+        if cstats is not None:
+            cs = carry[2]
+            if per_key:
+                cs = jax.tree_util.tree_map(lambda a: a[0], cs)
+            row.update(cstats(cs))
+        return row
+
+    return stats_fn
 
 
 def _init_carry(bank: SamplerBank, model: ModelAdapter, batches,
@@ -234,7 +295,7 @@ def _init_carry(bank: SamplerBank, model: ModelAdapter, batches,
 def make_bank_run_loop(bank: SamplerBank, model: ModelAdapter, *,
                        retrain_every: int = 1, train_keys,
                        per_key: bool = False, superbatch: int | None = None,
-                       controller=None) -> Callable:
+                       controller=None, telemetry=None) -> Callable:
     """Compile the keyed-stream management loop once.
 
     Returns ``run(key, batches, bcounts) -> (state, params, trace)``:
@@ -264,28 +325,50 @@ def make_bank_run_loop(bank: SamplerBank, model: ModelAdapter, *,
 
     Memoized like :func:`repro.manage.make_run_loop`; ``superbatch`` chunks
     the scan with the same divisor rule, bit-identically.
+
+    ``telemetry``: an optional :class:`repro.obs.Telemetry` handle -- the
+    loop drains per-tick records (routing gauges + the probed tenant's
+    Thm 4.1 columns, ``telemetry.probe_key`` defaulting to key 0) at
+    ``telemetry.every``-tick boundaries, with the SAME ``(state, params,
+    trace)`` outputs bit-for-bit as ``telemetry=None``.
     """
 
     def build():
+        G = _effective_superbatch(superbatch, retrain_every)
         full, fast = _make_bank_ticks(bank, model, retrain_every, train_keys,
-                                      per_key, controller)
-        scan = _superbatched_scan(
-            full, fast, _effective_superbatch(superbatch, retrain_every)
-        )
+                                      per_key, controller,
+                                      with_obs=telemetry is not None)
+        if telemetry is None:
+            scan = _superbatched_scan(full, fast, G)
+        else:
+            pk = 0 if telemetry.probe_key is None else int(telemetry.probe_key)
+            stats = _make_bank_stats(bank, controller, per_key, retrain_every,
+                                     pk)
+            if telemetry.resolve_transport() == "fetch":
+                scan = _telemetry_fetch_scan(full, fast, G, telemetry, stats)
+            else:
+                scan = _telemetry_scan(full, fast, G, telemetry, stats)
 
         @jax.jit
         def run(key, batches, bcounts):
             carry0 = _init_carry(bank, model, batches, train_keys, per_key,
                                  controller)
-            carry, trace = scan(key, carry0, batches, bcounts)
-            return carry[0], carry[1], trace
+            if telemetry is None:
+                carry, trace = scan(key, carry0, batches, bcounts)
+                return carry[0], carry[1], trace
+            carry, trace, aux = scan(key, carry0, batches, bcounts)
+            return carry[0], carry[1], trace, aux
 
-        return run
+        if telemetry is None:
+            return run
+        return _wrap_run_header(run, telemetry,
+                                scheme=f"bank.{bank.scheme}", G=G,
+                                init=bank.init, proto_of=keyed_item_proto)
 
     return _memoized(
         "bank_run_loop",
         (bank, model, retrain_every, _memo_key(train_keys), per_key,
-         superbatch, controller),
+         superbatch, controller, telemetry),
         build,
     )
 
@@ -293,7 +376,8 @@ def make_bank_run_loop(bank: SamplerBank, model: ModelAdapter, *,
 def make_sharded_bank_loop(bank: SamplerBank, model: ModelAdapter, mesh, *,
                            retrain_every: int = 1, train_keys,
                            per_key: bool = False,
-                           superbatch: int | None = None) -> Callable:
+                           superbatch: int | None = None,
+                           telemetry=None) -> Callable:
     """The key-sharded bank loop: keys split across devices, zero payload
     collectives.
 
@@ -319,32 +403,54 @@ def make_sharded_bank_loop(bank: SamplerBank, model: ModelAdapter, mesh, *,
     axis = distributed.AXIS
 
     def build():
+        G = _effective_superbatch(superbatch, retrain_every)
         metric_fn = None if per_key else _psum_metric(model)
         full, fast = _make_bank_ticks(bank, model, retrain_every, train_keys,
-                                      per_key, None, metric_fn=metric_fn)
-        scan = _superbatched_scan(
-            full, fast, _effective_superbatch(superbatch, retrain_every)
-        )
+                                      per_key, None, metric_fn=metric_fn,
+                                      with_obs=telemetry is not None)
+        if telemetry is None:
+            scan = _superbatched_scan(full, fast, G)
+        else:
+            # the drained columns are shard 0's local view (its bank, its
+            # key range); the host keeps only shard 0's stream
+            pk = 0 if telemetry.probe_key is None else int(telemetry.probe_key)
+            stats = _make_bank_stats(bank, None, per_key, retrain_every, pk)
+            if telemetry.resolve_transport() == "fetch":
+                scan = _telemetry_fetch_scan(full, fast, G, telemetry, stats)
+            else:
+                scan = _telemetry_scan(full, fast, G, telemetry, stats,
+                                       shard_axis=axis)
 
         def body(key, batches, bcounts):
             carry0 = _init_carry(bank, model, batches, train_keys, per_key,
                                  None)
-            carry, trace = scan(key, carry0, batches, bcounts[:, 0])
+            if telemetry is None:
+                carry, trace = scan(key, carry0, batches, bcounts[:, 0])
+                tail = ()
+            else:
+                carry, trace, aux = scan(key, carry0, batches, bcounts[:, 0])
+                tail = (aux,)
             return tuple(
                 distributed.gather_tree(x) for x in (carry[0], carry[1],
                                                      trace)
-            )
+            ) + tail
 
-        return jax.jit(distributed.shard_map(
+        jitted = jax.jit(distributed.shard_map(
             body, mesh=mesh,
             in_specs=(P(), P(None, axis), P(None, axis)),
-            out_specs=(P(), P(), P()),
+            out_specs=tuple(P() for _ in range(3 if telemetry is None
+                                              else 4)),
         ))
+        if telemetry is None:
+            return jitted
+        return _wrap_run_header(jitted, telemetry,
+                                scheme=f"bank.{bank.scheme}", G=G,
+                                init=bank.init, proto_of=keyed_item_proto)
 
     return _memoized(
         "sharded_bank_loop",
         (bank, model, mesh, retrain_every, _memo_key(train_keys), per_key,
-         superbatch),
+         superbatch, telemetry),
         build,
     )
 

@@ -75,6 +75,8 @@ import numpy as np
 from repro.core import distributed
 from repro.core.api import Sampler
 from repro.manage.models import ModelAdapter
+from repro.obs import probe as _obs_probe
+from repro.obs.profile import scope as _scope
 
 
 def tick_keys(key: jax.Array, t) -> tuple[jax.Array, jax.Array, jax.Array]:
@@ -149,9 +151,13 @@ def _make_fast_tick(sampler: Sampler, model: ModelAdapter) -> Callable:
 
     def fast(key, t, state, params, batch_items, bcount):
         k_step, k_extract, _ = tick_keys(key, t)
-        metric = model.evaluate(params, batch_items, bcount)
-        state = sampler.step(k_step, state, batch_items, bcount)
-        return state, {"metric": metric, "size": sampler.size(k_extract, state)}
+        with _scope("manage.eval"):
+            metric = model.evaluate(params, batch_items, bcount)
+        with _scope("manage.sampler_step"):
+            state = sampler.step(k_step, state, batch_items, bcount)
+        with _scope("manage.size"):
+            size = sampler.size(k_extract, state)
+        return state, {"metric": metric, "size": size}
 
     return fast
 
@@ -184,27 +190,36 @@ def _make_controlled_ticks(sampler: Sampler, model: ModelAdapter,
     def full(key, t, carry, batch_items, bcount):
         state, params, cstate = carry
         k_step, k_extract, k_fit = tick_keys(key, t)
-        metric = metric_of(params, batch_items, bcount)
-        d = controller.rate(cstate)
-        state = sampler.step_decayed(k_step, state, batch_items, bcount, d)
+        with _scope("manage.eval"):
+            metric = metric_of(params, batch_items, bcount)
+        with _scope("manage.sampler_step"):
+            d = controller.rate(cstate)
+            state = sampler.step_decayed(k_step, state, batch_items, bcount,
+                                         d)
         do_fit = (t + 1) % retrain_every == 0
         cstate = controller.observe(cstate, metric, do_fit)
-        params = jax.lax.cond(
-            do_fit,
-            lambda: model.fit(k_fit, params, extract(k_extract, state)),
-            lambda: params,
-        )
-        m = {"metric": metric, "size": size(k_extract, state), "decay": d}
+        with _scope("manage.retrain"):
+            params = jax.lax.cond(
+                do_fit,
+                lambda: model.fit(k_fit, params, extract(k_extract, state)),
+                lambda: params,
+            )
+        with _scope("manage.size"):
+            m = {"metric": metric, "size": size(k_extract, state), "decay": d}
         return (state, params, cstate), m
 
     def fast(key, t, carry, batch_items, bcount):
         state, params, cstate = carry
         k_step, k_extract, _ = tick_keys(key, t)
-        metric = metric_of(params, batch_items, bcount)
-        d = controller.rate(cstate)
-        state = sampler.step_decayed(k_step, state, batch_items, bcount, d)
+        with _scope("manage.eval"):
+            metric = metric_of(params, batch_items, bcount)
+        with _scope("manage.sampler_step"):
+            d = controller.rate(cstate)
+            state = sampler.step_decayed(k_step, state, batch_items, bcount,
+                                         d)
         cstate = controller.observe(cstate, metric, False)
-        m = {"metric": metric, "size": size(k_extract, state), "decay": d}
+        with _scope("manage.size"):
+            m = {"metric": metric, "size": size(k_extract, state), "decay": d}
         return (state, params, cstate), m
 
     return full, fast
@@ -274,6 +289,284 @@ def _superbatched_scan(tick: Callable, fast: Callable, G: int) -> Callable:
     return scan
 
 
+def _wrap_stats(fn: Callable, stats_fn: Callable) -> Callable:
+    """Wrap a loop tick so its metrics become ``(m, row)``: the trace entry
+    plus one fixed-shape telemetry stats row. A tick's metrics dict may
+    carry a reserved ``"_obs"`` entry (telemetry-only columns, e.g. bank
+    routing stats): it is diverted to ``stats_fn`` and stripped from the
+    trace."""
+
+    def wrapped(key, t, carry, batch, bcount):
+        carry, m = fn(key, t, carry, batch, bcount)
+        obs = {}
+        if isinstance(m, dict) and "_obs" in m:
+            m = dict(m)
+            obs = m.pop("_obs")
+        with _scope("obs.stats"):
+            row = stats_fn(t, batch, bcount, carry, m, obs)
+        return carry, (m, row)
+
+    return wrapped
+
+
+def _telemetry_fetch_scan(tick: Callable, fast: Callable, G: int, telem,
+                          stats_fn: Callable) -> Callable:
+    """The ``"fetch"`` drain transport (DESIGN.md Sec. 14): the plain
+    :func:`_superbatched_scan` with the per-tick stats rows riding the scan
+    ys next to the trace -- NO host callback anywhere in the compiled
+    module. ``scan(...) -> (carry, trace, rows)`` where ``rows`` is the
+    [T]-stacked column dict; the run wrapper (:func:`_wrap_run_header`)
+    fetches it after the jitted call and feeds ``telem.every``-tick blocks
+    to :meth:`repro.obs.Telemetry._drain_cb`, preserving the callback
+    transport's tick-record stream (same records, same order; only the
+    trailing partial block may coalesce where the callback transport
+    drains rem-chunks and unrolled tails separately). Fast ticks do zero
+    host transfers; the one fetch at the end
+    is the explicitly-allowed drain (the wrapper opts it out of
+    ``jax.transfer_guard_device_to_host``)."""
+    tick_w, fast_w = _wrap_stats(tick, stats_fn), _wrap_stats(fast, stats_fn)
+    inner = _superbatched_scan(tick_w, fast_w, G)
+
+    def scan(key, carry0, batches, bcounts, t0=0):
+        carry, (trace, rows) = inner(key, carry0, batches, bcounts, t0)
+        return carry, trace, rows
+
+    return scan
+
+
+def _telemetry_scan(tick: Callable, fast: Callable, G: int, telem,
+                    stats_fn: Callable,
+                    shard_axis: str | None = None) -> Callable:
+    """The :func:`_superbatched_scan` skeleton with in-scan telemetry
+    (DESIGN.md Sec. 14): every tick additionally computes one fixed-shape
+    stats row (``stats_fn(t, batch, bcount, carry, m, obs) -> {col:
+    scalar}``), rows accumulate on-device in the scan stack, and blocks of
+    ``telem.every`` ticks (rounded down to whole G-chunks, floor one chunk)
+    drain to :meth:`repro.obs.Telemetry._drain_cb` at chunk-group
+    boundaries -- the fast ticks inside a chunk never touch the host, and
+    the drain does not trip ``jax.transfer_guard_device_to_host`` (asserted
+    in tests/test_obs.py).
+
+    The drain transport is ``jax.pure_callback`` with a token chained
+    through every drain, NOT the effectful callbacks: any effect-carrying
+    host callback (``io_callback`` ordered or not, ``debug.callback``) in
+    the compiled module serializes XLA:CPU thunk execution and was measured
+    to cost ~40% on the cap-4096 fused loop REGARDLESS of drain frequency
+    -- even a single top-level drain per run; ``pure_callback`` keeps the
+    concurrent executor and measures in the noise (benchmarks/
+    obs_overhead.py). Each drain consumes the previous drain's token and
+    returns the next, so the data dependency forces drains to run in stream
+    order, and the final token is threaded out of the jitted program by
+    every caller so the chain is never dead-code-eliminated. The callback
+    mutates host state behind a nominally pure op -- sanctioned here because
+    nothing in the computation reads it back: worst case under exotic
+    re-execution is a duplicated telemetry block, never a wrong sample.
+
+    Structure: the T//G chunks are grouped into periods of P = every // G
+    chunks; an outer scan over whole periods runs an inner scan of P chunks
+    then drains the period's P*G rows; leftover chunks (< P) run in one more
+    scan with their own drain; tail ticks (T % G) run unrolled and drain
+    last. The tick composition -- G-1 fast + 1 full per chunk, tails full --
+    is IDENTICAL to :func:`_superbatched_scan`, so the returned ``(carry,
+    trace)`` is bit-identical to the telemetry-off loop for any (G, every).
+    Returns ``scan(key, carry0, batches, bcounts, t0=0) -> (carry, trace,
+    token)``.
+
+    A tick's metrics dict may carry a reserved ``"_obs"`` entry (telemetry-
+    only columns, e.g. bank routing stats): it is diverted to ``stats_fn``
+    and stripped from the trace. Under ``shard_map`` pass ``shard_axis``:
+    every shard drains (the callback fires per shard) but the host keeps
+    only shard 0's stream -- the stats columns are replicated or shard-0
+    quantities by construction, and so is the returned token.
+    """
+    P = max(int(telem.every) // G, 1)
+
+    def _host_drain(me, rows, tok):
+        telem._drain_cb(me, rows)
+        return np.int32(int(tok) + 1)
+
+    tick_w, fast_w = _wrap_stats(tick, stats_fn), _wrap_stats(fast, stats_fn)
+
+    def scan(key, carry0, batches, bcounts, t0=0):
+        T = bcounts.shape[0]
+        nchunks = T // G
+        Tm = nchunks * G
+        t0 = jnp.asarray(t0, jnp.int32)
+        nper = nchunks // P
+        Tp = nper * P * G
+        me = (jax.lax.axis_index(shard_axis) if shard_axis is not None
+              else jnp.int32(0))
+        ticks = t0 + jnp.arange(T, dtype=jnp.int32)
+
+        def at(tree, idx):
+            return jax.tree_util.tree_map(lambda a: a[idx], tree)
+
+        def part(tree, lo, hi, prefix):
+            return jax.tree_util.tree_map(
+                lambda a: a[lo:hi].reshape(prefix + a.shape[1:]), tree
+            )
+
+        def chunk_body(carry, inp):
+            ct, cb, cc = inp
+            outs = []
+            for g in range(G - 1):
+                carry, o = fast_w(key, ct[g], carry, at(cb, g), cc[g])
+                outs.append(o)
+            carry, o = tick_w(key, ct[G - 1], carry, at(cb, G - 1), cc[G - 1])
+            outs.append(o)
+            return carry, jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs), *outs
+            )
+
+        def drain(rows_flat, tok):
+            return jax.pure_callback(
+                _host_drain, jax.ShapeDtypeStruct((), jnp.int32),
+                me, rows_flat, tok,
+            )
+
+        def flat2(tree, n):
+            return jax.tree_util.tree_map(
+                lambda a: a.reshape((n,) + a.shape[2:]), tree
+            )
+
+        traces = []
+        carry = carry0
+        tok = jnp.int32(0)
+
+        if nper:
+            inp = (part(ticks, 0, Tp, (nper, P, G)),
+                   part(batches, 0, Tp, (nper, P, G)),
+                   part(bcounts, 0, Tp, (nper, P, G)))
+
+            def period_body(ct, pin):
+                carry, tok = ct
+                carry, (m, rows) = jax.lax.scan(chunk_body, carry, pin)
+                tok = drain(flat2(rows, P * G), tok)
+                return (carry, tok), m
+
+            (carry, tok), m = jax.lax.scan(period_body, (carry, tok), inp)
+            traces.append(jax.tree_util.tree_map(
+                lambda a: a.reshape((Tp,) + a.shape[3:]), m
+            ))
+
+        rem = nchunks - nper * P
+        if rem:
+            inp = (part(ticks, Tp, Tm, (rem, G)),
+                   part(batches, Tp, Tm, (rem, G)),
+                   part(bcounts, Tp, Tm, (rem, G)))
+            carry, (m, rows) = jax.lax.scan(chunk_body, carry, inp)
+            tok = drain(flat2(rows, rem * G), tok)
+            traces.append(flat2(m, rem * G))
+
+        tails_m, tails_r = [], []
+        for t in range(Tm, T):
+            carry, (m, row) = tick_w(key, t0 + jnp.int32(t), carry,
+                                     at(batches, t), bcounts[t])
+            tails_m.append(m)
+            tails_r.append(row)
+        if tails_r:
+            tok = drain(jax.tree_util.tree_map(lambda *xs: jnp.stack(xs),
+                                               *tails_r), tok)
+            traces.append(jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs), *tails_m
+            ))
+
+        if not traces:  # T == 0: an empty scan still shapes the trace
+            carry, (m, _) = jax.lax.scan(
+                chunk_body, carry,
+                (part(ticks, 0, 0, (0, G)), part(batches, 0, 0, (0, G)),
+                 part(bcounts, 0, 0, (0, G))),
+            )
+            return carry, flat2(m, 0), tok
+
+        trace = traces[0] if len(traces) == 1 else jax.tree_util.tree_map(
+            lambda *xs: jnp.concatenate(xs), *traces
+        )
+        return carry, trace, tok
+
+    return scan
+
+
+def _make_loop_stats(sampler: Sampler, controller,
+                     retrain_every: int) -> Callable:
+    """The single-sampler loops' telemetry row: per-tick sample size, the
+    stored mass C / decayed weight W gauges (:func:`repro.obs.probe.
+    make_state_stats`), the retrain flag, the applied decay factor (from the
+    controller trace entry, else the schedule's static rate), and the
+    controller's lambda/hold/pulse gauges when one is in the carry."""
+    state_stats = _obs_probe.make_state_stats(sampler)
+    d0 = _obs_probe.static_decay(sampler)
+    cstats = getattr(controller, "stats", None)
+
+    def stats_fn(t, batch, bcount, carry, m, obs):
+        del batch, obs
+        t = jnp.asarray(t, jnp.int32)
+        row = {
+            "t": t,
+            "bcount": jnp.asarray(bcount, jnp.int32),
+            "metric": jnp.asarray(m["metric"], jnp.float32),
+            "size": jnp.asarray(m["size"], jnp.int32),
+            "retrain": (t + 1) % retrain_every == 0,
+        }
+        row.update(state_stats(carry[0]))
+        if "decay" in m:
+            row["decay"] = jnp.asarray(m["decay"], jnp.float32)
+        elif d0 is not None:
+            row["decay"] = jnp.float32(d0)
+        if cstats is not None:
+            row.update(cstats(carry[2]))
+        return row
+
+    return stats_fn
+
+
+def _wrap_run_header(jitted: Callable, telemetry, *, scheme: str, G: int,
+                     init: Callable, proto_of: Callable) -> Callable:
+    """Wrap a compiled loop so each invocation opens a telemetry run: one
+    ``kind="run"`` header record (static facts incl. the reservoir-state
+    bytes gauge via ``jax.eval_shape``, computed once per loop -- nothing
+    materializes), then the jitted call. The jitted program returns the
+    user outputs plus a transport-dependent aux: the drain-chain token
+    (:func:`_telemetry_scan` -- blocking on it guarantees every drained
+    record has reached the sinks) or the stacked rows dict
+    (:func:`_telemetry_fetch_scan` -- drained here, in ``telemetry.every``
+    blocks, through the same ``_drain_cb``). Either way the aux is stripped
+    from what the caller sees."""
+    cache: dict = {}
+
+    def run(key, batches, bcounts):
+        if "state_bytes" not in cache:
+            try:
+                cache["state_bytes"] = _obs_probe.state_nbytes(
+                    init, proto_of(batches))
+            except Exception:
+                cache["state_bytes"] = None  # e.g. init needs a collective
+        telemetry.open_run({
+            "scheme": scheme,
+            "ticks": int(bcounts.shape[0]),
+            "superbatch": G,
+            "every": telemetry.every,
+            "backend": jax.default_backend(),
+            "jax": jax.__version__,
+            "state_bytes": cache["state_bytes"],
+        })
+        *out, aux = jitted(key, batches, bcounts)
+        if isinstance(aux, dict):  # fetch transport: drain the stacked rows
+            with jax.transfer_guard_device_to_host("allow"):
+                cols = {k: np.asarray(v) for k, v in aux.items()}
+            n = min((c.shape[0] for c in cols.values()), default=0)
+            every = max(telemetry.every // G, 1) * G
+            for s in range(0, n, every):
+                telemetry._drain_cb(
+                    0, {k: c[s:s + every] for k, c in cols.items()})
+        else:
+            jax.block_until_ready(aux)  # the chain: all drains have landed
+        telemetry.flush()
+        return tuple(out)
+
+    return run
+
+
 def _pair_carry(tick: Callable, fast: Callable) -> tuple[Callable, Callable]:
     """Adapt the public (state, params)-signature tick builders to the
     opaque-carry contract of :func:`_superbatched_scan`."""
@@ -296,20 +589,26 @@ def _make_local_tick(sampler: Sampler, model: ModelAdapter,
 
     def step(key, t, state, params, batch_items, bcount):
         k_step, k_extract, k_fit = tick_keys(key, t)
-        metric = model.evaluate(params, batch_items, bcount)
-        state = sampler.step(k_step, state, batch_items, bcount)
+        with _scope("manage.eval"):
+            metric = model.evaluate(params, batch_items, bcount)
+        with _scope("manage.sampler_step"):
+            state = sampler.step(k_step, state, batch_items, bcount)
 
         # extract (full prefix permutation + realization draw) only runs on
         # retrain ticks; the per-tick size metric takes the payload-free path.
         # Both consume k_extract, so sizes/views agree and traces are
         # unchanged vs. extracting every tick.
         do_fit = (t + 1) % retrain_every == 0
-        params = jax.lax.cond(
-            do_fit,
-            lambda: model.fit(k_fit, params, sampler.extract(k_extract, state)),
-            lambda: params,
-        )
-        metrics = {"metric": metric, "size": sampler.size(k_extract, state)}
+        with _scope("manage.retrain"):
+            params = jax.lax.cond(
+                do_fit,
+                lambda: model.fit(k_fit, params,
+                                  sampler.extract(k_extract, state)),
+                lambda: params,
+            )
+        with _scope("manage.size"):
+            metrics = {"metric": metric,
+                       "size": sampler.size(k_extract, state)}
         return state, params, metrics
 
     return step
@@ -371,7 +670,7 @@ def _memoized(kind: str, key: tuple, build: Callable[[], Callable]) -> Callable:
 def make_run_loop(sampler: Sampler, model: ModelAdapter, *,
                   retrain_every: int = 1,
                   superbatch: int | None = None,
-                  controller=None) -> Callable:
+                  controller=None, telemetry=None) -> Callable:
     """Compile the full-stream loop once.
 
     Returns ``run(key, batches, bcounts) -> (state, params, trace)`` where
@@ -396,19 +695,31 @@ def make_run_loop(sampler: Sampler, model: ModelAdapter, *,
     sampler must be decay-capable (rtbs/ttbs/btbs); without a controller the
     program is exactly the historical one.
 
-    Memoized on ``(sampler, model, retrain_every, superbatch, controller)``:
-    repeat calls return the same compiled callable.
+    ``telemetry`` (a :class:`repro.obs.Telemetry`) threads in-scan
+    observability (DESIGN.md Sec. 14): every tick computes a stats row
+    on-device and ``telemetry.every``-tick blocks drain to the host sinks
+    over the handle's transport (fetched as jit outputs after the run, or
+    live at chunk-group boundaries through a token-chained
+    ``pure_callback``); each invocation additionally emits a ``kind="run"``
+    header. The returned ``(state,
+    params, trace)`` stays bit-identical to the telemetry-off program
+    (asserted in tests/test_obs.py); ``telemetry=None`` compiles exactly
+    the historical loop.
+
+    Memoized on ``(sampler, model, retrain_every, superbatch, controller,
+    telemetry)``: repeat calls return the same compiled callable.
     """
     return _memoized(
-        "run_loop", (sampler, model, retrain_every, superbatch, controller),
+        "run_loop",
+        (sampler, model, retrain_every, superbatch, controller, telemetry),
         lambda: _build_run_loop(sampler, model, retrain_every, superbatch,
-                                controller),
+                                controller, telemetry),
     )
 
 
 def _build_run_loop(sampler: Sampler, model: ModelAdapter,
                     retrain_every: int, superbatch: int | None,
-                    controller=None) -> Callable:
+                    controller=None, telemetry=None) -> Callable:
     _check_local(sampler)
     if controller is None:
         tick, fast = _pair_carry(
@@ -419,19 +730,31 @@ def _build_run_loop(sampler: Sampler, model: ModelAdapter,
         _check_controllable(sampler)
         tick, fast = _make_controlled_ticks(sampler, model, controller,
                                             retrain_every)
-    scan = _superbatched_scan(
-        tick, fast, _effective_superbatch(superbatch, retrain_every)
-    )
+    G = _effective_superbatch(superbatch, retrain_every)
+    if telemetry is None:
+        scan = _superbatched_scan(tick, fast, G)
+    else:
+        stats = _make_loop_stats(sampler, controller, retrain_every)
+        if telemetry.resolve_transport() == "fetch":
+            scan = _telemetry_fetch_scan(tick, fast, G, telemetry, stats)
+        else:
+            scan = _telemetry_scan(tick, fast, G, telemetry, stats)
 
     @jax.jit
     def run(key, batches, bcounts):
         carry0 = (sampler.init(item_proto(batches)), model.init())
         if controller is not None:
             carry0 = carry0 + (controller.init(),)
-        carry, trace = scan(key, carry0, batches, bcounts)
-        return carry[0], carry[1], trace
+        if telemetry is None:
+            carry, trace = scan(key, carry0, batches, bcounts)
+            return carry[0], carry[1], trace
+        carry, trace, aux = scan(key, carry0, batches, bcounts)
+        return carry[0], carry[1], trace, aux
 
-    return run
+    if telemetry is None:
+        return run
+    return _wrap_run_header(run, telemetry, scheme=sampler.scheme, G=G,
+                            init=sampler.init, proto_of=item_proto)
 
 
 def run_loop(key: jax.Array, sampler: Sampler, model: ModelAdapter,
@@ -509,19 +832,23 @@ def _make_sharded_tick(sampler: Sampler, model: ModelAdapter,
 
     def tick(key, t, state, params, batch_items, bcount):
         k_step, k_extract, k_fit = tick_keys(key, t)
-        metric = metric_of(params, batch_items, bcount)
+        with _scope("manage.eval"):
+            metric = metric_of(params, batch_items, bcount)
 
-        state = sampler.step(k_step, state, batch_items, bcount)
+        with _scope("manage.sampler_step"):
+            state = sampler.step(k_step, state, batch_items, bcount)
 
         do_fit = (t + 1) % retrain_every == 0
-        params = jax.lax.cond(
-            do_fit,
-            lambda: model.fit(
-                k_fit, params, sampler.extract_global(k_extract, state)
-            ),
-            lambda: params,
-        )
-        size = sampler.size_global(k_extract, state)
+        with _scope("manage.retrain"):
+            params = jax.lax.cond(
+                do_fit,
+                lambda: model.fit(
+                    k_fit, params, sampler.extract_global(k_extract, state)
+                ),
+                lambda: params,
+            )
+        with _scope("manage.size"):
+            size = sampler.size_global(k_extract, state)
         return state, params, {"metric": metric, "size": size}
 
     return tick
@@ -552,9 +879,12 @@ def _make_sharded_fast_tick(sampler: Sampler, model: ModelAdapter) -> Callable:
 
     def fast(key, t, state, params, batch_items, bcount):
         k_step, k_extract, _ = tick_keys(key, t)
-        metric = metric_of(params, batch_items, bcount)
-        state = sampler.step(k_step, state, batch_items, bcount)
-        size = sampler.size_global(k_extract, state)
+        with _scope("manage.eval"):
+            metric = metric_of(params, batch_items, bcount)
+        with _scope("manage.sampler_step"):
+            state = sampler.step(k_step, state, batch_items, bcount)
+        with _scope("manage.size"):
+            size = sampler.size_global(k_extract, state)
         return state, {"metric": metric, "size": size}
 
     return fast
@@ -588,7 +918,7 @@ def _make_controlled_sharded_ticks(sampler: Sampler, model: ModelAdapter,
 def make_sharded_run_loop(sampler: Sampler, model: ModelAdapter, mesh, *,
                           retrain_every: int = 1,
                           superbatch: int | None = None,
-                          controller=None) -> Callable:
+                          controller=None, telemetry=None) -> Callable:
     """Compile the paper's model-management loop for a sharded sampler.
 
     Returns ``run(key, batches, bcounts) -> (state, params, trace)``:
@@ -613,39 +943,57 @@ def make_sharded_run_loop(sampler: Sampler, model: ModelAdapter, mesh, *,
     non-retrain fast ticks additionally drop the retrain-gated all_gather
     from their trace). ``controller`` threads the closed-loop decay
     controller exactly as in :func:`make_run_loop` -- it observes the psum'd
-    global metric, so its state stays replicated. Memoized on ``(sampler,
-    model, mesh, retrain_every, superbatch, controller)``.
+    global metric, so its state stays replicated. ``telemetry`` threads
+    in-scan observability exactly as in :func:`make_run_loop`; every shard
+    reaches the drain callback with its own axis index and the host
+    keeps only shard 0's stream (the drained columns are replicated or
+    shard-0 gauges). Memoized on ``(sampler, model, mesh, retrain_every,
+    superbatch, controller, telemetry)``.
     """
     _check_sharded(sampler)
     if controller is not None:
         _check_controllable(sampler)
-    return _memoized(
-        "sharded_run_loop",
-        (sampler, model, mesh, retrain_every, superbatch, controller),
-        lambda: jax.jit(distributed.shard_map(
+
+    def build():
+        jitted = jax.jit(distributed.shard_map(
             _sharded_loop_body(sampler, model, retrain_every, superbatch,
-                               controller),
+                               controller, telemetry),
             mesh=mesh,
             in_specs=_sharded_in_specs(distributed.AXIS),
-            out_specs=_replicated_out_specs(),
-        )),
+            out_specs=_replicated_out_specs(3 if telemetry is None else 4),
+        ))
+        if telemetry is None:
+            return jitted
+        return _wrap_run_header(
+            jitted, telemetry, scheme=sampler.scheme,
+            G=_effective_superbatch(superbatch, retrain_every),
+            init=sampler.init, proto_of=item_proto,
+        )
+
+    return _memoized(
+        "sharded_run_loop",
+        (sampler, model, mesh, retrain_every, superbatch, controller,
+         telemetry),
+        build,
     )
 
 
-def _replicated_out_specs():
+def _replicated_out_specs(n: int = 3):
     from jax.sharding import PartitionSpec as P
 
-    # gathered state / params / trace are replicated by construction
-    return (P(), P(), P())
+    # gathered state / params / trace (+ the drain token under telemetry,
+    # identical on every shard) are replicated by construction
+    return tuple(P() for _ in range(n))
 
 
 def _sharded_loop_body(sampler: Sampler, model: ModelAdapter,
                        retrain_every: int,
                        superbatch: int | None = None,
-                       controller=None) -> Callable:
+                       controller=None, telemetry=None) -> Callable:
     """Per-shard whole-stream program: superbatched scan of the sharded tick
     (the :func:`_superbatched_scan` skeleton, same chunking contract as
-    :func:`_build_run_loop`)."""
+    :func:`_build_run_loop`). With ``telemetry`` the scan drains stats rows
+    per shard (the host filters to shard 0 via the axis index)."""
     if controller is None:
         tick, fast = _pair_carry(
             _make_sharded_tick(sampler, model, retrain_every),
@@ -654,17 +1002,28 @@ def _sharded_loop_body(sampler: Sampler, model: ModelAdapter,
     else:
         tick, fast = _make_controlled_sharded_ticks(sampler, model,
                                                     controller, retrain_every)
-    scan = _superbatched_scan(
-        tick, fast, _effective_superbatch(superbatch, retrain_every)
-    )
+    G = _effective_superbatch(superbatch, retrain_every)
+    if telemetry is None:
+        scan = _superbatched_scan(tick, fast, G)
+    else:
+        stats = _make_loop_stats(sampler, controller, retrain_every)
+        if telemetry.resolve_transport() == "fetch":
+            # rows ride out as replicated-or-shard-0 outputs (out_spec P())
+            scan = _telemetry_fetch_scan(tick, fast, G, telemetry, stats)
+        else:
+            scan = _telemetry_scan(tick, fast, G, telemetry, stats,
+                                   shard_axis=distributed.AXIS)
 
     def loop(key, batches, bcounts):
         # per-shard views: batch leaves [T, bcap_s, ...], bcounts [T, 1]
         carry0 = (sampler.init(item_proto(batches)), model.init())
         if controller is not None:
             carry0 = carry0 + (controller.init(),)
-        carry, trace = scan(key, carry0, batches, bcounts[:, 0])
-        return distributed.gather_tree(carry[0]), carry[1], trace
+        if telemetry is None:
+            carry, trace = scan(key, carry0, batches, bcounts[:, 0])
+            return distributed.gather_tree(carry[0]), carry[1], trace
+        carry, trace, aux = scan(key, carry0, batches, bcounts[:, 0])
+        return distributed.gather_tree(carry[0]), carry[1], trace, aux
 
     return loop
 

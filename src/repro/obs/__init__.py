@@ -1,0 +1,49 @@
+"""repro.obs -- in-loop telemetry, profiler hooks, and live sampler health
+monitors (DESIGN.md Sec. 14).
+
+The observability layer for the paper's operational claims: per-tick sample
+size / fill fraction / fractional mass C / decayed weight W / effective
+lambda and controller pulses / retrain events / bank routing stats are
+computed INSIDE the jitted manage loops (:mod:`repro.obs.probe`), stacked
+on-device, and drained to the host only in whole superbatch blocks --
+either fetched as jit outputs after the run or streamed live through a
+token-chained ``pure_callback`` (:mod:`repro.obs.telemetry`,
+``transport=``) -- fast ticks stay host-sync-free. Drained records run through health monitors
+(:mod:`repro.obs.monitors` -- sample-size stability, the Thm 4.1
+inclusion-probability self-check, NaN/stuck-lambda/overflow alarms) and fan
+out to sinks (:mod:`repro.obs.sinks` -- JSONL / stdout / in-memory).
+Profiler hooks live in :mod:`repro.obs.profile`.
+
+Thread a handle through any loop builder::
+
+    tel = obs.make_telemetry("runs/exp1", every=64)
+    run = make_run_loop(sampler, model, retrain_every=5, telemetry=tel)
+
+``telemetry=None`` (the default) compiles the historical program,
+bit-identically.
+"""
+from .monitors import (  # noqa: F401
+    InclusionDrift,
+    Monitor,
+    NanAlarm,
+    OverflowAlarm,
+    SampleSizeStability,
+    StuckLambda,
+    default_monitors,
+)
+from .probe import (  # noqa: F401
+    make_bank_probe_stats,
+    make_state_stats,
+    state_nbytes,
+    static_decay,
+    tree_nbytes,
+)
+from .profile import annotation, profile_span, scope  # noqa: F401
+from .sinks import (  # noqa: F401
+    JsonlSink,
+    MemorySink,
+    Sink,
+    StdoutSink,
+    as_json_record,
+)
+from .telemetry import Telemetry, make_telemetry  # noqa: F401

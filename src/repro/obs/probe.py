@@ -1,0 +1,139 @@
+"""In-loop gauge extraction: tiny jit-safe closures that read the paper's
+operational quantities out of sampler/bank state (DESIGN.md Sec. 14).
+
+Everything here runs INSIDE the compiled loops, so the contract is strict:
+fixed shapes, a handful of scalar gathers per tick, no host interaction.
+The host-facing column names match what :mod:`repro.obs.monitors` consumes
+(``weight`` = stored fractional mass C, ``total_weight`` = decayed W,
+``probe_*`` = the sampled tenant's columns for the Thm 4.1 self-check).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_nbytes(tree: Any) -> int:
+    """Total buffer bytes of a pytree of arrays or ShapeDtypeStructs -- the
+    reservoir-memory gauge ("Succinct Sampling on Streams" motivates
+    tracking the actual footprint, PAPERS.md)."""
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(tree):
+        shape = getattr(leaf, "shape", ())
+        dtype = getattr(leaf, "dtype", None)
+        if dtype is None:
+            continue
+        total += int(math.prod(shape)) * jnp.dtype(dtype).itemsize
+    return total
+
+
+def state_nbytes(init: Callable, proto: Any) -> int:
+    """Reservoir-state bytes of ``init(proto)`` WITHOUT materializing it
+    (``jax.eval_shape``), for the run-header gauge."""
+    return tree_nbytes(jax.eval_shape(init, proto))
+
+
+def static_decay(sampler) -> float | None:
+    """The per-tick decay factor d = e^{-lambda} when it is a static
+    constant (the common exponential schedule), else None. Lets telemetry
+    rows carry ``decay`` -- the Thm 4.1 recursion input -- even on loops
+    with no controller in the carry."""
+    hyper = getattr(sampler, "hyper", None) or {}
+    sched = hyper.get("decay")
+    rate = getattr(sched, "static_rate", None)
+    if rate is not None:
+        return float(rate)
+    lam = hyper.get("lam")
+    if lam is not None:
+        return math.exp(-float(lam))
+    return None
+
+
+def make_state_stats(sampler=None) -> Callable[[Any], dict]:
+    """Build ``stats(state) -> {column: scalar array}`` for a sampler state
+    by structural inspection, covering every scheme family:
+
+      * R-TBS (``RTBSState``): ``weight`` = C (latent mass), ``total_weight``
+        = W, ``fill_frac`` = C / n;
+      * buffer schemes (``BufferState``: ttbs/btbs/sw/brs): ``weight`` = the
+        buffer count, ``overflow_total`` = cumulative capacity drops;
+      * distributed shard states: per-shard view of the replicated
+        ``weight``/``total_weight`` scalars;
+      * time-varying-schedule wrappers (``DecayedState``) are unwrapped.
+
+    Unknown states degrade to an empty dict -- telemetry never makes a
+    scheme unusable.
+    """
+    n = None
+    hyper = getattr(sampler, "hyper", None) or {}
+    if hyper.get("n"):
+        n = int(hyper["n"])
+
+    def stats(state: Any) -> dict:
+        inner = getattr(state, "inner", None)
+        if inner is not None:  # DecayedState wrapper
+            state = inner
+        row: dict = {}
+        lat = getattr(state, "lat", None)
+        weight = None
+        if lat is not None:
+            weight = lat.weight
+        elif getattr(state, "weight", None) is not None:
+            weight = state.weight
+        elif getattr(state, "count", None) is not None:
+            weight = state.count.astype(jnp.float32)
+        if weight is not None:
+            row["weight"] = jnp.asarray(weight, jnp.float32)
+            if n:
+                row["fill_frac"] = row["weight"] / jnp.float32(n)
+        tw = getattr(state, "total_weight", None)
+        if tw is not None:
+            row["total_weight"] = jnp.asarray(tw, jnp.float32)
+        ov = getattr(state, "overflow", None)
+        if ov is not None and getattr(ov, "ndim", 1) == 0:
+            row["overflow_total"] = jnp.asarray(ov, jnp.int32)
+        return row
+
+    return stats
+
+
+def make_bank_probe_stats(bank, probe_key: int) -> Callable:
+    """Build ``stats(state, keys, bcount) -> {probe_*: scalar}`` for one
+    sampled tenant of a :class:`repro.bank.SamplerBank` -- the bank-level
+    Thm 4.1 self-check columns.
+
+    ``probe_total_weight`` is the key's EFFECTIVE decayed weight
+    W_eff = pending * total_weight (what a standalone sampler fed only this
+    key's arrivals would hold), ``probe_arrivals`` the key's accepted
+    arrivals this tick (clipped to the routing ``bcap``, matching the
+    bank's own W recursion), ``probe_weight`` the effective stored mass
+    C_eff, ``probe_overflow`` the key's cumulative drops. The host monitor
+    re-integrates W_eff,t = d_t W_eff,t-1 + a_t against these.
+    """
+    pk = int(probe_key)
+    if not 0 <= pk < bank.num_keys:
+        raise ValueError(
+            f"probe_key must lie in [0, {bank.num_keys}); got {pk}"
+        )
+    bcap = int(bank.bcap)
+
+    def stats(state, keys: jax.Array, bcount) -> dict:
+        b = keys.shape[0]
+        valid = jnp.arange(b, dtype=jnp.int32) < jnp.asarray(bcount, jnp.int32)
+        arrivals = ((keys.astype(jnp.int32) == pk) & valid).sum()
+        w_eff = state.pending[pk] * state.total_weight[pk]
+        return {
+            "probe_key": jnp.int32(pk),
+            "probe_arrivals": jnp.minimum(arrivals, bcap).astype(jnp.int32),
+            "probe_total_weight": jnp.asarray(w_eff, jnp.float32),
+            "probe_weight": jnp.minimum(
+                jnp.asarray(state.weight[pk], jnp.float32), w_eff
+            ),
+            "probe_pending": jnp.asarray(state.pending[pk], jnp.float32),
+            "probe_overflow": jnp.asarray(state.overflow[pk], jnp.int32),
+        }
+
+    return stats

@@ -1,0 +1,171 @@
+"""The telemetry driver: on-device accumulation, boundary drains, host
+fan-out (DESIGN.md Sec. 14).
+
+A :class:`Telemetry` object is the single handle the manage loops take via
+their optional ``telemetry=`` argument. Inside the jitted scans the loops
+stack one fixed-shape stats row per tick (a dict of scalar gauges -- see
+:mod:`repro.obs.probe`) and hand ``every``-tick blocks of rows to
+:meth:`Telemetry._drain_cb` over one of two transports (``transport=``,
+see the class docstring): returned as jit outputs and drained after the
+run (``"fetch"``), or through a token-chained ``jax.pure_callback`` at
+period boundaries while the run executes (``"callback"`` -- the chain
+orders the drains; effectful callbacks serialize XLA:CPU thunk execution,
+see ``manage/loop.py _telemetry_scan``). Either way fast ticks never touch
+the host, and an instrumented run executes under
+``jax.transfer_guard_device_to_host`` (asserted in
+tests/test_obs.py). On the host each row becomes one
+``kind="tick"`` record, runs through the health monitors
+(:mod:`repro.obs.monitors`), and fans out -- with any warnings -- to the
+sinks (:mod:`repro.obs.sinks`).
+
+The object hashes by identity, so loop builders memoize per telemetry
+handle exactly like Samplers/ModelAdapters; ``telemetry=None`` compiles the
+historical program, bit-identically.
+"""
+from __future__ import annotations
+
+from typing import Any, Iterable
+
+import numpy as np
+
+from .monitors import Monitor
+from .sinks import Sink
+
+
+class Telemetry:
+    """Telemetry configuration + host-side drain state.
+
+    ``sinks``: where records go; ``every``: the drain period in ticks
+    (rounded down to a multiple of the loop's superbatch chunk G, floor one
+    chunk); ``monitors``: host detectors folded over every tick record;
+    ``probe_key``: the sampled tenant for bank-level Thm 4.1 self-checks
+    (default key 0); ``transport``: how drained blocks leave the compiled
+    loop -- ``"callback"`` fires the in-scan ``pure_callback`` chain at
+    every period boundary (records land while the run executes),
+    ``"fetch"`` returns the stacked rows as ordinary jit outputs and drains
+    them right after the run (zero host callbacks in the module -- on
+    XLA:CPU ANY live host callback serializes thunk execution and costs
+    ~35% on the fused hot loop, see ``manage/loop.py _telemetry_scan``),
+    and ``"auto"`` (default) picks fetch on the cpu backend, callback
+    elsewhere.
+    """
+
+    def __init__(self, sinks: Iterable[Sink], *, every: int = 64,
+                 monitors: Iterable[Monitor] = (),
+                 probe_key: int | None = None, transport: str = "auto"):
+        if every < 1:
+            raise ValueError(f"drain period must be >= 1 tick; got {every}")
+        if transport not in ("auto", "callback", "fetch"):
+            raise ValueError(
+                "transport must be 'auto', 'callback' or 'fetch'; "
+                f"got {transport!r}"
+            )
+        self.sinks = tuple(sinks)
+        self.every = int(every)
+        self.monitors = tuple(monitors)
+        self.probe_key = probe_key
+        self.transport = transport
+        self.runs = 0
+        self.drains = 0
+        self.ticks = 0
+        self.queries = 0  # serve-path records (kind="query")
+
+    def resolve_transport(self) -> str:
+        """The concrete drain transport for the current backend."""
+        if self.transport != "auto":
+            return self.transport
+        import jax
+
+        return "fetch" if jax.default_backend() == "cpu" else "callback"
+
+    # -- host-side API -----------------------------------------------------
+    def open_run(self, meta: dict) -> None:
+        """Start-of-run header: reset monitors, emit one ``kind="run"``
+        record carrying the run's static facts (scheme, ticks, chunking,
+        backend, jax version, reservoir-state bytes)."""
+        self.runs += 1
+        for mon in self.monitors:
+            mon.reset()
+        self._fan_out({"kind": "run", "run": self.runs, **meta})
+        self.flush()
+
+    def _fan_out(self, record: dict) -> None:
+        for s in self.sinks:
+            s.emit(record)
+
+    def emit(self, record: dict) -> None:
+        """Emit one record directly from host code (per-tick drivers, the
+        serve path). ``kind="tick"`` records are folded through the
+        monitors; resulting warnings are emitted alongside."""
+        if record.get("kind") == "tick":
+            self.ticks += 1
+            warnings = []
+            for mon in self.monitors:
+                warnings.extend(mon.observe(record))
+            self._fan_out(record)
+            for w in warnings:
+                self._fan_out(w)
+        else:
+            if record.get("kind") == "query":
+                self.queries += 1
+            self._fan_out(record)
+
+    def flush(self) -> None:
+        for s in self.sinks:
+            s.flush()
+
+    def close(self) -> None:
+        for s in self.sinks:
+            s.close()
+
+    # -- the in-scan drain target ------------------------------------------
+    def _drain_cb(self, me: Any, rows: dict) -> None:
+        """Consume one drained block: ``rows`` is a dict of stacked column
+        arrays (leading dim = ticks in the block). ``me`` is the calling
+        shard's index under ``shard_map`` (0 on single-host loops): the
+        stats columns are replicated-or-shard-0 quantities, so only shard
+        0's stream is kept -- every other shard's drain is a no-op.
+
+        This runs on the loop's critical path (a ``pure_callback`` target,
+        see ``manage/loop.py _telemetry_scan``), so columns are converted
+        in bulk (`tolist`) instead of per-element."""
+        if int(me) != 0:
+            return
+        self.drains += 1
+        cols = {k: np.asarray(v).tolist() for k, v in rows.items()}
+        names = ("kind", *cols)
+        if self.monitors:
+            for vals in zip(*cols.values()):
+                self.emit(dict(zip(names, ("tick", *vals))))
+        else:  # no monitor fold: skip emit's per-record dispatch
+            sinks = self.sinks
+            for vals in zip(*cols.values()):
+                rec = dict(zip(names, ("tick", *vals)))
+                self.ticks += 1
+                for s in sinks:
+                    s.emit(rec)
+        self.flush()
+
+
+def make_telemetry(dir: str | None = None, *, stdout: bool = False,
+                   memory: bool = False, every: int = 64,
+                   monitors: Iterable[Monitor] | None = None,
+                   probe_key: int | None = None,
+                   jsonl_name: str = "telemetry.jsonl") -> Telemetry:
+    """Convenience constructor for the launch scripts: JSONL under ``dir``
+    and/or stdout and/or an in-memory ring, with the default monitor set
+    unless ``monitors`` overrides it."""
+    from .monitors import default_monitors
+    from .sinks import JsonlSink, MemorySink, StdoutSink
+
+    sinks: list[Sink] = []
+    if dir is not None:
+        import os
+
+        sinks.append(JsonlSink(os.path.join(dir, jsonl_name)))
+    if stdout:
+        sinks.append(StdoutSink())
+    if memory or not sinks:
+        sinks.append(MemorySink())
+    mons = default_monitors() if monitors is None else tuple(monitors)
+    return Telemetry(sinks, every=every, monitors=mons, probe_key=probe_key)

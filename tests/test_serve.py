@@ -1,0 +1,91 @@
+"""Serving-path telemetry: repro.launch.serve + examples/serve_batched.py.
+
+The batched serving driver emits one ``kind="query"`` record per served
+prompt through the same repro.obs sinks the manage loops drain into
+(DESIGN.md Sec. 14). These tests run the driver at smoke size with an
+injected in-memory Telemetry handle and assert the counters/records line
+up with the prompts actually served.
+"""
+import importlib.util
+import json
+import pathlib
+import sys
+
+import pytest
+
+from repro.launch import serve
+from repro.obs import JsonlSink, MemorySink, Telemetry
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+ARGS = ["--arch", "mamba2_370m", "--preset", "smoke",
+        "--prompts", "2", "--prompt-len", "4", "--gen", "2"]
+
+
+@pytest.fixture(scope="module")
+def served(tmp_path_factory):
+    """One serve run shared by the assertions below (prefill+decode compile
+    once); drains into both a memory ring and a JSONL file."""
+    path = tmp_path_factory.mktemp("serve") / "telemetry.jsonl"
+    mem = MemorySink()
+    tel = Telemetry([mem, JsonlSink(str(path))], monitors=())
+    gen = serve.main(ARGS, telemetry=tel)
+    return gen, tel, mem, path
+
+
+def test_serve_counts_queries(served):
+    gen, tel, mem, _ = served
+    assert tel.queries == 2  # one query record per prompt
+    queries = mem.by_kind("query")
+    assert len(queries) == 2
+    assert [q["query"] for q in queries] == [0, 1]
+
+
+def test_serve_query_records_cumulative_tokens(served):
+    gen, _, mem, _ = served
+    queries = mem.by_kind("query")
+    per_prompt = gen.shape[1]
+    assert all(q["gen_tokens"] == per_prompt for q in queries)
+    # tokens_served is cumulative across the batch
+    assert [q["tokens_served"] for q in queries] == [per_prompt, 2 * per_prompt]
+    for q in queries:
+        assert q["prompt_len"] == 4
+        assert q["prefill_s"] >= 0.0 and q["decode_s"] >= 0.0
+        assert q["tok_per_s"] > 0.0
+
+
+def test_serve_run_header(served):
+    _, tel, mem, _ = served
+    assert tel.runs == 1
+    runs = mem.by_kind("run")
+    assert len(runs) == 1
+    hdr = runs[0]
+    assert hdr["mode"] == "serve"
+    assert hdr["arch"] == "mamba2_370m"
+    assert hdr["prompts"] == 2 and hdr["gen"] == 2
+
+
+def test_serve_jsonl_stream_valid(served):
+    """The JSONL stream written by the injected sink passes the CI schema
+    validator (benchmarks.check_telemetry)."""
+    _, _, _, path = served
+    sys.path.insert(0, str(REPO))
+    try:
+        from benchmarks.check_telemetry import check_file
+    finally:
+        sys.path.pop(0)
+    assert check_file(path) == []
+    lines = [json.loads(x) for x in path.read_text().splitlines()]
+    assert lines[0]["kind"] == "run"
+    assert sum(r["kind"] == "query" for r in lines) == 2
+
+
+def test_serve_batched_example_wires_serve_main():
+    """examples/serve_batched.py is a thin wrapper over the serving driver:
+    importing it must not run anything, and its ``main`` must be the
+    driver's (so the example inherits telemetry/profiling flags)."""
+    path = REPO / "examples" / "serve_batched.py"
+    spec = importlib.util.spec_from_file_location("serve_batched_example", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)  # __main__ guard keeps this import-only
+    assert mod.main is serve.main
